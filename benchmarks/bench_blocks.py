@@ -1,0 +1,42 @@
+"""Fig. 16: more blocks -> less memory, more latency."""
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import build_vision, emit, vision_infos
+from benchmarks.bench_coefficients import profile_delay_model
+from repro.core.partition import PartitionPlanner
+from repro.core.runtime import SwappedSequential
+from repro.models import vision
+
+BATCH = 4
+
+
+def run() -> None:
+    dm = profile_delay_model()
+    kind = "resnet"
+    _, layers, params, hw = build_vision(kind)
+    x = jax.random.normal(jax.random.key(3), (BATCH, hw, hw, 3))
+    units = [(f"{kind}{i:02d}", p) for i, p in enumerate(params)]
+    infos = vision_infos(layers, params, hw, BATCH)
+    planner = PartitionPlanner(infos, dm)
+
+    for n in range(3, 8):
+        table = planner.lookup_table(n, budget=float("inf"), delta=0.0)
+        best = min((r for r in table if r.latency is not None),
+                   key=lambda r: r.latency)
+        with tempfile.TemporaryDirectory() as d:
+            sw = SwappedSequential(
+                units, lambda i, p, xx: vision.apply_layer(layers[i], p, xx),
+                d, mode="snet")
+            sw.set_plan(best.points)
+            sw.forward(x)
+            sw.engine.stats.__init__()
+            _, st = sw.forward(x)
+            sw.close()
+        emit(f"fig16.blocks_{n}", st["latency_s"] * 1e6,
+             f"mem_mb={st['peak_resident_mb']:.2f};"
+             f"pred_ms={best.latency*1e3:.1f}")

@@ -1,0 +1,81 @@
+"""Fig. 9: profile the four device-dependent coefficients (alpha, beta,
+gamma, eta) by linear regression over real swap/execute measurements.
+
+Profiling uses controlled synthetic blocks — size and depth varied
+independently (the paper's one-off offline device profiling) — then the
+fitted DelayModel drives every scheduler decision in the other benches.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.cost_model import DelayModel
+from repro.core.swap_engine import LayerStore, SwapEngine
+
+_CACHE = {}
+
+SIZES_MB = (2, 4, 8, 16, 32)
+DEPTHS = (2, 16, 64)
+REPS = 3
+
+
+def _synthetic_unit(size_bytes: int, depth: int, seed: int) -> dict:
+    per = max(size_bytes // depth // 4, 16)
+    rng = np.random.default_rng(seed)
+    return {f"t{i}": rng.standard_normal(per).astype(np.float32)
+            for i in range(depth)}
+
+
+def profile_delay_model(verbose: bool = False) -> DelayModel:
+    if "dm" in _CACHE:
+        return _CACHE["dm"]
+    units = []
+    for s_mb in SIZES_MB:
+        for dpt in DEPTHS:
+            units.append((f"u{s_mb}mb_d{dpt}",
+                          _synthetic_unit(s_mb << 20, dpt, s_mb * dpt)))
+    s_in, s_ex, s_out = [], [], []
+    with tempfile.TemporaryDirectory() as d:
+        store = LayerStore.build(units, d)
+        eng = SwapEngine(store, mode="snet")
+        for rep in range(REPS):
+            for name, _ in units:
+                h = eng.swap_in([name])
+                skel = store.skeletons[name]
+                if rep:                      # rep 0 warms the file cache
+                    s_in.append((skel.nbytes, skel.depth, h.io_s + h.asm_s))
+                t_out = eng.swap_out(h)
+                if rep:
+                    s_out.append((skel.depth, t_out))
+        eng.close()
+    # execution samples: jit matmuls of varying FLOPs
+    x = jax.random.normal(jax.random.key(0), (8, 4096))
+    mm = jax.jit(lambda w, xx: xx @ w)
+    for k in (256, 512, 1024, 2048, 4096):
+        w = jax.random.normal(jax.random.key(k), (4096, k))
+        mm(w, x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            mm(w, x).block_until_ready()
+        s_ex.append((2.0 * 8 * 4096 * k, (time.perf_counter() - t0) / 10))
+    dm = DelayModel.fit(s_in, s_ex, s_out)
+    _CACHE["dm"] = dm
+    _CACHE["samples"] = (s_in, s_ex, s_out)
+    return dm
+
+
+def run() -> None:
+    dm = profile_delay_model()
+    s_in, s_ex, s_out = _CACHE["samples"]
+    r2 = dm.r2_in(s_in)
+    emit("fig9.alpha_us_per_mb", dm.alpha * 1e12,
+         f"r2_in={r2:.3f};swap_bw_gbps={1e-9/max(dm.alpha,1e-30):.2f}")
+    emit("fig9.beta_us_per_ref", dm.beta * 1e6, "per-reference assembly")
+    emit("fig9.gamma_us_per_gflop", dm.gamma * 1e15, "execution slope")
+    emit("fig9.eta_us_per_ref", dm.eta * 1e6, "pointer reset + gc")

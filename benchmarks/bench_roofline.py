@@ -1,0 +1,104 @@
+"""§Roofline: three-term roofline per (arch x shape) from the compiled
+dry-run artifacts (results/dryrun/*.json), single-pod mesh.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+Hardware: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+cost_analysis() and the parsed HLO are per-partition (per device) under SPMD,
+so no further division by chip count is needed.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, emit
+from repro.configs import ARCHS, SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = 256
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """MODEL_FLOPS: 6*N*D train (fwd+bwd), 2*N_active*D inference."""
+    cfg = ARCHS[arch]
+    sh = SHAPES[shape]
+    n_act = cfg.n_active_params()
+    tokens = sh.global_batch * (1 if sh.mode == "decode" else sh.seq_len)
+    mult = 6.0 if sh.mode == "train" else 2.0
+    return mult * n_act * tokens
+
+
+def load_rows(mesh: str = "16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun",
+                                              f"*__{mesh}.json"))):
+        with open(path) as fh:
+            r = json.load(fh)
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "error": r.get("error", "?")})
+            continue
+        ca = r["cost_analysis"]
+        hlo_flops = ca.get("flops", 0.0)
+        analytic = r.get("flops_analytic_per_dev", 0.0)
+        if not analytic:
+            from repro.configs.flops import analytic_flops_per_device
+            analytic = analytic_flops_per_device(
+                ARCHS[r["arch"]], SHAPES[r["shape"]], CHIPS)
+        # train lowerings keep the layer scan rolled (cost analysis counts the
+        # body once) -> use the config-derived analytic FLOPs; inference
+        # lowerings are fully unrolled -> HLO numbers are trustworthy.
+        flops = analytic if r.get("mode") == "train" else hlo_flops
+        bytes_acc = ca.get("bytes accessed", 0.0)
+        coll = sum(v["bytes"] for v in r["collectives"].values())
+        t_c = flops / PEAK_FLOPS
+        t_m = bytes_acc / HBM_BW
+        t_n = coll / LINK_BW
+        dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops(r["arch"], r["shape"])
+        useful = mf / max(flops * CHIPS, 1e-30)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute": t_c, "t_memory": t_m, "t_collective": t_n,
+            "dominant": dom, "model_flops_ratio": useful,
+            "flops_per_dev": flops, "bytes_per_dev": bytes_acc,
+            "coll_bytes_per_dev": coll,
+            "mem": r.get("memory_analysis", {}),
+        })
+    return rows
+
+
+def run() -> None:
+    rows = load_rows()
+    if not rows:
+        emit("roofline.missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    out_csv = os.path.join(RESULTS_DIR, "roofline.csv")
+    with open(out_csv, "w") as fh:
+        fh.write("arch,shape,t_compute_s,t_memory_s,t_collective_s,"
+                 "dominant,model_flops_ratio\n")
+        for r in rows:
+            if "error" in r:
+                continue
+            fh.write(f"{r['arch']},{r['shape']},{r['t_compute']:.6g},"
+                     f"{r['t_memory']:.6g},{r['t_collective']:.6g},"
+                     f"{r['dominant']},{r['model_flops_ratio']:.4f}\n")
+    for r in rows:
+        if "error" in r:
+            emit(f"roofline.{r['arch']}.{r['shape']}", 0.0,
+                 f"ERROR={r['error'][:60]}")
+            continue
+        step_s = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        emit(f"roofline.{r['arch']}.{r['shape']}", step_s * 1e6,
+             f"dom={r['dominant']};tc={r['t_compute']:.4g};"
+             f"tm={r['t_memory']:.4g};tn={r['t_collective']:.4g};"
+             f"useful={r['model_flops_ratio']:.3f}")

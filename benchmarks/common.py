@@ -1,0 +1,76 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import contextlib
+import io
+import os
+import sys
+import tempfile
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """One CSV row per benchmark quantity: name,us_per_call,derived."""
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def cosine_fidelity(a, b) -> float:
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    n = min(a.size, b.size)       # pruned model may have same-size head output
+    a, b = a[:n], b[:n]
+    return float(a @ b / max(np.linalg.norm(a) * np.linalg.norm(b), 1e-30))
+
+
+def scenario_models():
+    """The paper's three application scenarios (scaled, DESIGN.md §8)."""
+    from repro.models import vision
+    return {
+        "self_driving": [("yolo", True), ("fcn", True),
+                         ("vgg", False), ("resnet", False)],
+        "rsu": [("yolo", True), ("yolo", True), ("resnet", False),
+                ("resnet", False), ("vgg", False)],
+        "uav": [("yolo", True), ("resnet", False)],
+    }
+
+
+def build_vision(kind: str, seed: int = 0):
+    from repro.models import vision
+    name, layers, hw = vision.MODELS[kind]()
+    params = vision.init_convnet(layers, jax.random.key(seed))
+    return name, layers, params, hw
+
+
+def vision_infos(layers, params, hw: int, batch: int):
+    """LayerInfo rows for a conv net."""
+    from repro.core.cost_model import LayerInfo
+    from repro.models.vision import layer_flops_conv, trace_hw
+    hws = trace_hw(layers, hw)
+    rows = []
+    for i, (l, p) in enumerate(zip(layers, params)):
+        size = sum(np.asarray(x).nbytes for x in jax.tree.leaves(p))
+        depth = max(len(jax.tree.leaves(p)), 1)
+        rows.append(LayerInfo(f"{l.kind}{i:02d}", int(size), depth,
+                              layer_flops_conv(l, hws[i], batch)))
+    return rows

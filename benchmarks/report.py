@@ -1,0 +1,111 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+results/dryrun/*.json. Usage: PYTHONPATH=src python -m benchmarks.report"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_roofline import (CHIPS, HBM_BW, LINK_BW, PEAK_FLOPS,
+                                       load_rows, model_flops)
+from repro.configs import ARCHS, SHAPES, applicable
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}g}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "dryrun",
+                                              f"*__{mesh}.json"))):
+        r = json.load(open(path))
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | **{r.get('error','?')[:40]}** | | | | |")
+            continue
+        ca, mem = r["cost_analysis"], r["memory_analysis"]
+        coll = sum(v["bytes"] for v in r["collectives"].values())
+        ncoll = sum(v["count"] for v in r["collectives"].values())
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok ({r['compile_s']}s) "
+            f"| {fmt(ca.get('flops',0))} | {fmt(ca.get('bytes accessed',0))} "
+            f"| {mem.get('argument_size_in_bytes',0)/1e9:.2f} / "
+            f"{mem.get('temp_size_in_bytes',0)/1e9:.2f} "
+            f"| {coll/1e9:.2f} ({ncoll}) |")
+    hdr = ("| arch | shape | compile | HLO FLOPs/dev | HLO bytes/dev "
+           "| args / temps (GB/dev) | collective GB/dev (#ops) |\n"
+           "|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def skip_table() -> str:
+    out = []
+    for a in ARCHS:
+        for s in SHAPES:
+            if not applicable(ARCHS[a], SHAPES[s]):
+                why = ("encoder-only (no decode)" if not ARCHS[a].supports_decode()
+                       else "pure full attention — no sub-quadratic variant")
+                out.append(f"| {a} | {s} | {why} |")
+    return ("| arch | shape | reason |\n|---|---|---|\n" + "\n".join(out))
+
+
+def roofline_table() -> str:
+    rows = load_rows()
+    out = ["| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+           "| dominant | MODEL/HLO flops | one-line fix |",
+           "|---|---|---|---|---|---|---|---|"]
+    notes = {
+        "collective": "reduce cross-device bytes (flash-decode psum stats / "
+                      "weight-stationary expert sharding)",
+        "memory": "cut staged/recomputed bytes (bf16 staging, chunk remat, "
+                  "seq-parallel residuals, windowed KV)",
+        "compute": "at the MXU roofline — gains only from fewer FLOPs "
+                   "(sparsity, caching)",
+    }
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | {r['error'][:40]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(r['t_compute'])} "
+            f"| {fmt(r['t_memory'])} | {fmt(r['t_collective'])} "
+            f"| **{r['dominant']}** | {r['model_flops_ratio']:.2f} "
+            f"| {notes[r['dominant']]} |")
+    return "\n".join(out)
+
+
+def perf_compare(base_file: str, opt_file: str) -> dict:
+    b = json.load(open(base_file))
+    o = json.load(open(opt_file))
+
+    def terms(r):
+        ca = r["cost_analysis"]
+        coll = sum(v["bytes"] for v in r["collectives"].values())
+        return {
+            "flops": ca.get("flops", 0), "bytes": ca.get("bytes accessed", 0),
+            "coll": coll,
+            "t_c": ca.get("flops", 0) / PEAK_FLOPS,
+            "t_m": ca.get("bytes accessed", 0) / HBM_BW,
+            "t_n": coll / LINK_BW,
+            "temp_gb": r["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9,
+        }
+    return {"base": terms(b), "opt": terms(o)}
+
+
+if __name__ == "__main__":
+    print("## §Dry-run — single-pod 16x16 (256 chips)\n")
+    print(dryrun_table("16x16"))
+    print("\n## §Dry-run — multi-pod 2x16x16 (512 chips)\n")
+    print(dryrun_table("2x16x16"))
+    print("\n### Documented skips\n")
+    print(skip_table())
+    print("\n## §Roofline (single-pod)\n")
+    print(roofline_table())

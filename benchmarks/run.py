@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report. Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import (bench_ablation, bench_adaptation, bench_blocks,
+                        bench_coefficients, bench_overhead,
+                        bench_partition_table, bench_roofline,
+                        bench_scenarios)
+from benchmarks.common import ROWS, RESULTS_DIR
+
+MODULES = [
+    ("fig9_coefficients", bench_coefficients),
+    ("table3_partition_table", bench_partition_table),
+    ("fig11_13_scenarios", bench_scenarios),
+    ("fig15_ablation", bench_ablation),
+    ("fig16_blocks", bench_blocks),
+    ("fig18_adaptation", bench_adaptation),
+    ("fig19a_overhead", bench_overhead),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived", flush=True)
+    failed = []
+    for name, mod in MODULES:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name}: done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failed.append(name)
+            print(f"# {name}: FAILED", flush=True)
+            traceback.print_exc()
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "bench.csv"), "w") as fh:
+        fh.write("name,us_per_call,derived\n")
+        fh.write("\n".join(ROWS) + "\n")
+    if failed:
+        raise SystemExit(f"failed benches: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""LLM-on-edge serving (paper §10): batched generation, plus weight-swapped
+inference of a transformer whose parameters exceed the memory budget —
+the forward pass streams layer blocks with the m=2 pipeline.
+
+    PYTHONPATH=src python examples/llm_edge_serve.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.cost_model import DelayModel
+from repro.core.runtime import SwappedModel
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+
+def main() -> None:
+    cfg = dataclasses.replace(get_arch("gemma2-9b").reduced(),
+                              dtype="float32", n_layers=8)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    # 1) batched serving with KV cache (full weights resident)
+    engine = ServingEngine(model, params, max_len=96)
+    reqs = [Request(i, list(map(int, rng.integers(0, cfg.vocab_size, 24))),
+                    max_new_tokens=12) for i in range(4)]
+    stats = engine.generate(reqs)
+    print(f"batched serving: {stats['decode_steps']} decode steps, "
+          f"{stats['tok_per_s']:.1f} tok/s (cold, includes compile)")
+    print(f"  first request generated: {reqs[0].output}")
+
+    # 2) the same model's prefill under a 3x-too-small weight budget
+    total = sum(np.asarray(l).nbytes for l in jax.tree.leaves(params))
+    budget = total // 3
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 24)),
+                                   jnp.int32)}
+    ref, _ = jax.jit(model.prefill)(params, batch)
+    with tempfile.TemporaryDirectory() as d:
+        sm = SwappedModel(model, params, d, mode="snet")
+        plan = sm.partition(budget=budget, dm=DelayModel(), batch=4, seq=24)
+        logits, st = sm.forward(batch)
+        sm.close()
+    ok = np.allclose(np.asarray(logits), np.asarray(ref), rtol=1e-4, atol=1e-4)
+    print(f"weight-swapped prefill: {plan.n_blocks} blocks, "
+          f"peak {st['peak_resident_mb']:.1f} MB vs model {total/1e6:.1f} MB, "
+          f"lossless={ok}")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Multi-DNN scheduling (paper §6): run a self-driving-style fleet of models
+whose total memory exceeds the budget.
+
+    PYTHONPATH=src python examples/multi_dnn_scheduling.py
+
+Allocates the budget across models with Eq. 1 (performance-score calibrated),
+partitions each with the lookup table, executes all of them swapped, and then
+adapts when the budget shrinks at runtime (Fig. 18).
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.bench_coefficients import profile_delay_model
+from benchmarks.common import build_vision, vision_infos
+from repro.core.partition import PartitionPlanner
+from repro.core.runtime import SwappedSequential
+from repro.core.scheduler import MultiDNNScheduler, ScheduledModel
+from repro.models import vision
+
+BATCH = 4
+FLEET = [("yolo", "object detection"), ("fcn", "scene segmentation"),
+         ("vgg", "sign classification"), ("resnet", "car recognition")]
+
+
+def main() -> None:
+    print("profiling device coefficients (one-off)...")
+    dm = profile_delay_model()
+
+    scheduled, built = [], []
+    for i, (kind, task) in enumerate(FLEET):
+        name, layers, params, hw = build_vision(kind, seed=i)
+        infos = vision_infos(layers, params, hw, BATCH)
+        scheduled.append(ScheduledModel(f"{kind}:{task}",
+                                        PartitionPlanner(infos, dm)))
+        built.append((kind, layers, params, hw))
+
+    total = sum(float(np.sum(m.planner.sizes)) for m in scheduled)
+    available = total * 0.6
+    print(f"\nfleet demands {total/1e6:.1f} MB, budget {available/1e6:.1f} MB "
+          f"({total/available:.2f}x beyond)")
+
+    sched = MultiDNNScheduler(scheduled, available)
+    for row in sched.summary():
+        print(f"  {row['model']:28s} budget={row['budget_mb']:6.1f} MB "
+              f"blocks={row['n_blocks']} "
+              f"pred={row['predicted_latency_s']*1e3:6.1f} ms")
+
+    print("\nexecuting the fleet, swapped:")
+    for (kind, layers, params, hw), m in zip(built, scheduled):
+        x = jax.random.normal(jax.random.key(0), (BATCH, hw, hw, 3))
+        units = [(f"{kind}{i:02d}", p) for i, p in enumerate(params)]
+        with tempfile.TemporaryDirectory() as d:
+            sw = SwappedSequential(
+                units, lambda i, p, xx, _l=layers: vision.apply_layer(_l[i], p, xx),
+                d, mode="snet")
+            sw.set_plan(m.plan.points)
+            sw.forward(x)                       # warm
+            sw.engine.stats.__init__()
+            _, st = sw.forward(x)
+            sw.close()
+        print(f"  {m.name:28s} latency={st['latency_s']*1e3:6.1f} ms "
+              f"peak={st['peak_resident_mb']:6.1f} MB "
+              f"(budget {m.budget/1e6:.1f} MB)")
+
+    print("\nruntime dynamics: budget drops toward the fleet floor "
+          "(paper Fig. 18)...")
+    floors = sum(m.planner.min_feasible_budget() for m in scheduled)
+    dt = sched.adapt(max(available * 0.65, floors * 1.05))
+    print(f"adaptation finished in {dt*1e3:.0f} ms; new plans:")
+    for row in sched.summary():
+        print(f"  {row['model']:28s} budget={row['budget_mb']:6.1f} MB "
+              f"blocks={row['n_blocks']} "
+              f"pred={row['predicted_latency_s']*1e3:6.1f} ms")
+
+    print("\nbudget below the physical floor is rejected loudly:")
+    try:
+        sched.adapt(floors * 0.5)
+    except ValueError as e:
+        print(f"  ValueError: {e}")
+
+
+if __name__ == "__main__":
+    main()

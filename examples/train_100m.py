@@ -1,0 +1,30 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred steps
+on the synthetic pipeline and checkpoint through the SwapNet flat store.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+This is a thin wrapper over the real launcher (src/repro/launch/train.py);
+it exists so the example is a single file you can read top to bottom.
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main() -> None:
+    steps = "300"
+    if "--steps" in sys.argv:
+        steps = sys.argv[sys.argv.index("--steps") + 1]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "qwen2.5-3b", "--reduce", "100m",
+         "--steps", steps, "--batch", "4", "--seq", "256",
+         "--ckpt", os.path.join(ROOT, "results", "ckpt_100m")],
+        env=env, cwd=ROOT, check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Config-derived analytic FLOPs (no jax import side effects — usable from
+both the dry-run launcher and the roofline bench)."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def analytic_flops_per_device(cfg: ModelConfig, shape: ShapeConfig,
+                              n_devices: int) -> float:
+    """Exact model math per device. Needed because XLA cost analysis counts a
+    while-loop (scan) body once: train graphs keep the layer scan rolled, so
+    their HLO FLOPs are ~n_layers too small; inference lowerings are unrolled
+    and use HLO numbers directly."""
+    B = shape.global_batch
+    S = shape.seq_len
+    tokens = B * (1 if shape.mode == "decode" else S)
+    V, D = cfg.vocab_size, cfg.d_model
+    embed = V * D * (1 if cfg.tie_embeddings else 2)
+    mm = cfg.n_active_params() - embed          # matmul-ish params
+    head = D * V                                # logits matmul
+    fwd = 2.0 * (mm * tokens + head * tokens)
+    n_attn = sum(1 for k in cfg.layer_kinds()
+                 if k in ("dense", "moe", "shared_attn"))
+    hd = cfg.resolved_head_dim
+    skv = S if cfg.sliding_window is None else min(S, cfg.sliding_window)
+    if shape.mode == "decode":
+        fwd += 4.0 * B * skv * cfg.n_heads * hd * n_attn
+    else:
+        fwd += 4.0 * B * S * skv * cfg.n_heads * hd * n_attn / 2  # causal
+    if shape.mode == "train":
+        # fwd + bwd (2x fwd) + one remat recompute of fwd
+        return 4.0 * fwd / n_devices
+    return fwd / n_devices

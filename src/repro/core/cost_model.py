@@ -1,0 +1,150 @@
+"""Delay abstractions (paper §6.1) + model info table (Table 2).
+
+SwapNet exposes three per-block delays to schedulers:
+    t_in  = alpha * s_i + beta * d_i      (swap-in DMA + assembly references)
+    t_ex  = gamma * f_i                   (execution)
+    t_out = eta * d_i                     (pointer reset + GC)
+with (alpha, beta, gamma, eta) profiled once per device by linear regression
+(Fig. 9). s_i = block bytes, d_i = parameter depth (# tensors), f_i = FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class LayerInfo:
+    """One row of the model info table (paper Table 2)."""
+    name: str
+    size: int      # bytes (s contribution)
+    depth: int     # parameter tensors (d contribution)
+    flops: float   # forward FLOPs at the profiled shape (f contribution)
+
+
+@dataclass
+class DelayModel:
+    alpha: float = 1.2e-9    # s / byte        (~0.8 GB/s swap-in channel)
+    beta: float = 5.2e-5     # s / reference   (paper: 50-55 us per reference)
+    gamma: float = 2.0e-11   # s / FLOP
+    eta: float = 1.5e-5      # s / reference
+
+    def t_in(self, size: float, depth: float) -> float:
+        return self.alpha * size + self.beta * depth
+
+    def t_ex(self, flops: float) -> float:
+        return self.gamma * flops
+
+    def t_out(self, depth: float) -> float:
+        return self.eta * depth
+
+    @staticmethod
+    def fit(samples_in: Sequence[Tuple[float, float, float]],
+            samples_ex: Sequence[Tuple[float, float]],
+            samples_out: Sequence[Tuple[float, float]]) -> "DelayModel":
+        """Linear regression over profiled samples (paper Fig. 9).
+
+        samples_in:  (size, depth, measured_t_in)
+        samples_ex:  (flops, measured_t_ex)
+        samples_out: (depth, measured_t_out)
+        """
+        A = np.asarray([(s, d) for s, d, _ in samples_in], np.float64)
+        y = np.asarray([t for *_, t in samples_in], np.float64)
+        (alpha, beta), *_ = np.linalg.lstsq(A, y, rcond=None)
+        fx = np.asarray([f for f, _ in samples_ex], np.float64)
+        ty = np.asarray([t for _, t in samples_ex], np.float64)
+        gamma = float(fx @ ty / max(fx @ fx, 1e-30))
+        dx = np.asarray([d for d, _ in samples_out], np.float64)
+        oy = np.asarray([t for _, t in samples_out], np.float64)
+        eta = float(dx @ oy / max(dx @ dx, 1e-30))
+        return DelayModel(float(alpha), float(beta), gamma, eta)
+
+    def r2_in(self, samples_in) -> float:
+        y = np.asarray([t for *_, t in samples_in])
+        pred = np.asarray([self.t_in(s, d) for s, d, _ in samples_in])
+        ss = np.sum((y - y.mean()) ** 2)
+        return 1.0 - float(np.sum((y - pred) ** 2) / max(ss, 1e-30))
+
+
+# ---------------------------------------------------------------- info table
+def _matmul_params(tree) -> int:
+    import jax
+    return sum(l.size for l in jax.tree.leaves(tree) if getattr(l, "ndim", 0) >= 2)
+
+
+def _tree_bytes(tree) -> int:
+    import jax
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def _tree_depth(tree) -> int:
+    import jax
+    return len(jax.tree.leaves(tree))
+
+
+def layer_flops(cfg: ModelConfig, kind: str, tree, batch: int, seq: int) -> float:
+    """Forward FLOPs of one layer at (batch, seq). Matmuls: 2*params*tokens;
+    attention adds the 4*B*S*S_kv*H*hd score/value term; MoE counts only
+    active experts."""
+    T = batch * seq
+    mm = _matmul_params(tree)
+    if kind in ("dense", "moe", "shared_attn") and cfg.moe is not None and kind == "moe":
+        e = cfg.moe
+        per_expert = 3 * cfg.d_model * e.d_expert
+        mm = mm - e.n_routed * per_expert + e.top_k * per_expert
+    f = 2.0 * mm * T
+    if kind in ("dense", "moe", "shared_attn"):
+        skv = seq if cfg.sliding_window is None else min(seq, cfg.sliding_window)
+        hd = cfg.resolved_head_dim
+        f += 4.0 * batch * seq * skv * cfg.n_heads * hd / 2  # causal halves it
+    elif kind in ("mamba2", "rwkv6"):
+        s = cfg.ssm
+        nh = (cfg.d_model * (s.expand if s.kind == "mamba2" else 1)) // s.head_dim
+        state = s.d_state if s.kind == "mamba2" else s.head_dim
+        f += 6.0 * T * nh * s.head_dim * state
+    return f
+
+
+def model_info_table(model, params: dict, batch: int, seq: int) -> List[LayerInfo]:
+    """Per swappable unit: embedding, every layer (segments unstacked), head.
+    This is the paper's per-DNN meta file (Table 2)."""
+    import jax
+    cfg = model.cfg
+    rows: List[LayerInfo] = []
+
+    head_units = {}
+    for k in ("embed", "frontend", "mask_emb"):
+        if k in params:
+            head_units[k] = params[k]
+    if head_units:
+        rows.append(LayerInfo("embed", _tree_bytes(head_units),
+                              _tree_depth(head_units),
+                              2.0 * batch * seq * cfg.d_model))
+
+    for si, seg in enumerate(model.plan):
+        if not seg.scanned:
+            p = params["shared_attn"]
+            rows.append(LayerInfo(f"shared_attn@{seg.layer_ids[0]}",
+                                  _tree_bytes(p), _tree_depth(p),
+                                  layer_flops(cfg, "dense", p, batch, seq)))
+            continue
+        stacked = params["segments"][si]
+        for j, lid in enumerate(seg.layer_ids):
+            p = jax.tree.map(lambda a: a[j], stacked)
+            rows.append(LayerInfo(f"{seg.kind}@{lid}", _tree_bytes(p),
+                                  _tree_depth(p),
+                                  layer_flops(cfg, seg.kind, p, batch, seq)))
+
+    tail = {"final_norm": params["final_norm"]}
+    if "lm_head" in params:
+        tail["lm_head"] = params["lm_head"]
+    rows.append(LayerInfo("head", _tree_bytes(tail), _tree_depth(tail),
+                          2.0 * _matmul_params(tail) * batch * seq
+                          + 2.0 * batch * seq * cfg.d_model * cfg.vocab_size
+                          * (0 if "lm_head" in tail else 1)))
+    return rows

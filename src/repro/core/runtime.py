@@ -1,0 +1,353 @@
+"""SwappedModel: end-to-end swapped inference of any repro model (paper §3).
+
+Splits a model into swappable units (embedding, each layer, head), stores
+them via LayerStore, and executes a forward pass block-by-block under a
+memory budget with the m=2 double-buffered pipeline. Bit-identical to the
+in-memory model (lossless — the paper's headline property).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cost_model import DelayModel, LayerInfo, layer_flops
+from repro.core.partition import BlockPlan, PartitionPlanner
+from repro.core.swap_engine import LayerStore, SwapEngine
+from repro.models.layers import rms_norm, softcap
+from repro.models.transformer import Model, apply_layer
+
+
+@dataclass
+class Unit:
+    name: str
+    kind: str                 # embed | head | dense | moe | mamba2 | rwkv6 | shared_attn
+    layer_id: Optional[int]
+    params: dict
+
+
+def split_units(model: Model, params: dict) -> List[Unit]:
+    """The paper's get_layers(Net): one-time layer-wise division."""
+    cfg = model.cfg
+    units: List[Unit] = []
+    head_p = {k: params[k] for k in ("embed", "frontend", "mask_emb")
+              if k in params}
+    if head_p:
+        units.append(Unit("embed", "embed", None, head_p))
+    for si, seg in enumerate(model.plan):
+        if not seg.scanned:
+            units.append(Unit("shared_attn", "shared_attn",
+                              seg.layer_ids[0], params["shared_attn"]))
+            continue
+        stacked = params["segments"][si]
+        for j, lid in enumerate(seg.layer_ids):
+            p = jax.tree.map(lambda a, _j=j: np.asarray(a[_j]), stacked)
+            units.append(Unit(f"layer{lid:03d}_{seg.kind}", seg.kind, lid, p))
+    tail = {"final_norm": params["final_norm"]}
+    if "lm_head" in params:
+        tail["lm_head"] = params["lm_head"]
+    elif cfg.tie_embeddings and cfg.embed_inputs:
+        # tied head: materialize the transposed table in the head unit so the
+        # embed block need not stay resident (storage, not memory, pays)
+        tail["lm_head"] = np.asarray(params["embed"]).T.copy()
+    units.append(Unit("head", "head", None, tail))
+    return units
+
+
+def unit_infos(model: Model, units: Sequence[Unit], batch: int,
+               seq: int) -> List[LayerInfo]:
+    """Model info table rows (paper Table 2) aligned 1:1 with units."""
+    cfg = model.cfg
+    rows = []
+    for u in units:
+        size = sum(np.asarray(l).nbytes for l in jax.tree.leaves(u.params))
+        depth = len(jax.tree.leaves(u.params))
+        if u.kind == "embed":
+            f = 2.0 * batch * seq * cfg.d_model
+        elif u.kind == "head":
+            has_head = "lm_head" in u.params
+            f = 2.0 * batch * cfg.d_model * cfg.vocab_size * (1 if has_head else 1)
+        else:
+            kind = "dense" if u.kind == "shared_attn" else u.kind
+            f = layer_flops(cfg, kind, u.params, batch, seq)
+        rows.append(LayerInfo(u.name, int(size), depth, float(f)))
+    return rows
+
+
+class SwappedSequential:
+    """Generic swapped executor over an arbitrary unit list (used by the
+    scenario benchmarks for the paper's conv workloads)."""
+
+    def __init__(self, named_units, apply_fn, workdir: str,
+                 mode: str = "snet", budget: Optional[int] = None,
+                 gpu_dispatch: bool = False):
+        """named_units: [(name, params)]; apply_fn(i, params, x) -> x."""
+        self.named_units = list(named_units)
+        self.apply_fn = apply_fn
+        self.store = LayerStore.build(self.named_units, workdir)
+        self.engine = SwapEngine(self.store, mode=mode, budget=budget,
+                                 gpu_dispatch=gpu_dispatch)
+        self.plan: Optional[BlockPlan] = None
+        self._block_fns: Dict[Tuple[int, int], Any] = {}
+
+    def _block_fn(self, lo: int, hi: int):
+        """One jitted function per block (layers lo..hi fused): block
+        granularity is the execution unit, matching how the paper compiles
+        each block into an executable object."""
+        key = (lo, hi)
+        if key not in self._block_fns:
+            def fn(params_list, x, _lo=lo, _hi=hi):
+                for off in range(_hi - _lo):
+                    x = self.apply_fn(_lo + off, params_list[off], x)
+                return x
+            self._block_fns[key] = jax.jit(fn)
+        return self._block_fns[key]
+
+    def partition_with(self, infos, budget: int, dm: DelayModel,
+                       delta: float = 0.05) -> BlockPlan:
+        planner = PartitionPlanner(infos, dm)
+        self.plan, self.table = planner.best_partition(budget, delta)
+        self.planner = planner
+        return self.plan
+
+    def set_plan(self, points) -> None:
+        self.plan = BlockPlan(tuple(points), len(self.named_units))
+
+    def forward(self, x) -> Tuple[Any, Dict]:
+        assert self.plan is not None
+        eng = self.engine
+        blocks = self.plan.blocks()
+        overlap = self.plan.m >= 2       # m=1 plans must run strictly serial
+        t_start = time.perf_counter()
+        fut = eng.prefetch([self.named_units[i][0]
+                            for i in range(blocks[0][0], blocks[0][1])])
+        for bi, (lo, hi) in enumerate(blocks):
+            handle = fut.result()
+            if overlap and bi + 1 < len(blocks):
+                nlo, nhi = blocks[bi + 1]
+                fut = eng.prefetch([self.named_units[i][0]
+                                    for i in range(nlo, nhi)])
+            t0 = time.perf_counter()
+            x = self._block_fn(lo, hi)(handle.params, x)
+            x = jax.block_until_ready(x)
+            eng.record_exec(time.perf_counter() - t0)
+            eng.swap_out(handle)
+            if not overlap and bi + 1 < len(blocks):
+                nlo, nhi = blocks[bi + 1]       # serial: load AFTER freeing
+                fut = eng.prefetch([self.named_units[i][0]
+                                    for i in range(nlo, nhi)])
+        total = time.perf_counter() - t_start
+        st = eng.stats
+        return x, {"latency_s": total,
+                   "peak_resident_mb": st.peak_resident / 1e6,
+                   "t_in": list(st.t_in), "t_ex": list(st.t_ex),
+                   "t_out": list(st.t_out)}
+
+    def close(self):
+        self.engine.close()
+
+
+class SwappedModel:
+    """Executes ``model.prefill``-equivalent inference by swapping blocks."""
+
+    def __init__(self, model: Model, params: dict, workdir: str,
+                 mode: str = "snet", budget: Optional[int] = None,
+                 gpu_dispatch: bool = False):
+        self.model = model
+        self.cfg = model.cfg
+        self.units = split_units(model, params)
+        pinned = tuple({u.name for u in self.units if u.kind == "shared_attn"})
+        # de-dup shared units in the store
+        seen, store_units = set(), []
+        for u in self.units:
+            if u.name in seen:
+                continue
+            seen.add(u.name)
+            store_units.append((u.name, u.params))
+        self.store = LayerStore.build(store_units, workdir)
+        self.engine = SwapEngine(self.store, mode=mode, budget=budget,
+                                 gpu_dispatch=gpu_dispatch, pinned=pinned)
+        self.plan: Optional[BlockPlan] = None
+        self._jitted: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------ partition
+    def partition(self, budget: int, dm: DelayModel, batch: int, seq: int,
+                  delta: float = 0.05) -> BlockPlan:
+        infos = unit_infos(self.model, self.units, batch, seq)
+        planner = PartitionPlanner(infos, dm)
+        self.plan, self.table = planner.best_partition(budget, delta)
+        self.planner = planner
+        return self.plan
+
+    def set_plan(self, points: Tuple[int, ...]) -> None:
+        self.plan = BlockPlan(tuple(points), len(self.units))
+
+    # ------------------------------------------------------------ apply fns
+    def _apply_unit(self, unit: Unit, uparams: dict, x, positions, batch):
+        cfg = self.cfg
+        if unit.kind == "embed":
+            x, positions = self.model._embed(
+                jax.tree.map(jnp.asarray, uparams), batch, "prefill")
+            return x, positions
+        if unit.kind == "head":
+            h = rms_norm(x, jnp.asarray(uparams["final_norm"]).astype(x.dtype),
+                         cfg.norm_eps, plus_one=cfg.post_norms)
+            w = uparams.get("lm_head")
+            if w is None:
+                raise ValueError("tied head needs the embed unit resident; "
+                                 "SwappedModel stores lm_head explicitly")
+            logits = h.astype(jnp.float32) @ jnp.asarray(w, jnp.float32)
+            return softcap(logits, cfg.final_logit_softcap), positions
+        kind = "dense" if unit.kind == "shared_attn" else unit.kind
+        is_local = cfg.is_local_layer(unit.layer_id)
+        p = jax.tree.map(lambda a: jnp.asarray(a).astype(jnp.dtype(cfg.dtype))
+                         if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating)
+                         else jnp.asarray(a), uparams)
+        x, _, _ = apply_layer(cfg, kind, p, x, positions, is_local,
+                              None, None, "prefill")
+        return x, positions
+
+    # ------------------------------------------------------------ decode
+    def _unit_cache_struct(self, unit: Unit, batch: int, max_len: int):
+        """Decode cache ShapeDtypeStructs for one layer unit."""
+        import jax.numpy as jnp
+        from repro.models import ssm as ssm_mod
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        kind = "dense" if unit.kind == "shared_attn" else unit.kind
+        B, L = batch, max_len
+        if kind == "mamba2":
+            d_inner, nh, ds = ssm_mod.mamba2_dims(cfg)
+            return {"h": jnp.zeros((B, nh, cfg.ssm.head_dim, ds), jnp.float32),
+                    "conv": jnp.zeros((B, cfg.ssm.d_conv - 1, d_inner + 2 * ds), dt)}
+        if kind == "rwkv6":
+            nh, rhd = ssm_mod.rwkv6_dims(cfg)
+            return {"S": jnp.zeros((B, nh, rhd, rhd), jnp.float32),
+                    "shift1": jnp.zeros((B, 1, cfg.d_model), dt),
+                    "shift2": jnp.zeros((B, 1, cfg.d_model), dt)}
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"c_kv": jnp.zeros((B, L, m.kv_lora_rank), dt),
+                    "k_rope": jnp.zeros((B, L, m.qk_rope_head_dim), dt)}
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {"k": jnp.zeros((B, L, KV, hd), dt),
+                "v": jnp.zeros((B, L, KV, hd), dt)}
+
+    def decode_loop(self, prompt_tokens, max_new_tokens: int = 8,
+                    max_len: int = 128) -> Tuple[Any, Dict]:
+        """Greedy generation with WEIGHT-BLOCK STREAMING (paper §10: LLMs on
+        edge AI devices): every decode step swaps the model's blocks through
+        the memory window with the m=2 pipeline; only the KV/state caches and
+        one or two weight blocks are resident at any time.
+
+        prompt_tokens: [B, S] int32. Returns (generated [B, max_new], stats).
+        """
+        assert self.plan is not None and self.cfg.supports_decode()
+        cfg = self.cfg
+        B, S = prompt_tokens.shape
+        caches = {i: self._unit_cache_struct(u, B, max_len)
+                  for i, u in enumerate(self.units) if u.layer_id is not None}
+
+        def run_tokens(tokens, pos0):
+            """Teacher-forced pass, one token at a time, swapped."""
+            eng = self.engine
+            blocks = self.plan.blocks()
+            last_logits = None
+            for t in range(tokens.shape[1]):
+                tok = tokens[:, t:t + 1]
+                pos = jnp.full((B,), pos0 + t, jnp.int32)
+                batch = {"token": tok, "pos": pos}
+                if cfg.rope_type == "mrope":
+                    batch["positions"] = jnp.full((B, 1, 3), pos0 + t, jnp.int32)
+                fut = eng.prefetch([u.name for u in
+                                    self.units[blocks[0][0]:blocks[0][1]]])
+                x = positions = None
+                for bi, (lo, hi) in enumerate(blocks):
+                    handle = fut.result()
+                    if bi + 1 < len(blocks):
+                        nlo, nhi = blocks[bi + 1]
+                        fut = eng.prefetch([u.name for u in self.units[nlo:nhi]])
+                    for ui, p in zip(range(lo, hi), handle.params):
+                        unit = self.units[ui]
+                        if unit.kind == "embed":
+                            x, positions = self.model._embed(
+                                jax.tree.map(jnp.asarray, p), batch, "decode")
+                        elif unit.kind == "head":
+                            h = rms_norm(x, jnp.asarray(p["final_norm"]).astype(x.dtype),
+                                         cfg.norm_eps, plus_one=cfg.post_norms)
+                            last_logits = softcap(
+                                h.astype(jnp.float32) @ jnp.asarray(p["lm_head"], jnp.float32),
+                                cfg.final_logit_softcap)
+                        else:
+                            kind = "dense" if unit.kind == "shared_attn" else unit.kind
+                            pc = jax.tree.map(
+                                lambda a: jnp.asarray(a).astype(jnp.dtype(cfg.dtype))
+                                if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating)
+                                else jnp.asarray(a), p)
+                            x, caches[ui], _ = apply_layer(
+                                cfg, kind, pc, x, positions,
+                                cfg.is_local_layer(unit.layer_id),
+                                caches[ui], pos, "decode")
+                    eng.swap_out(handle)
+            return last_logits
+
+        t0 = time.time()
+        logits = run_tokens(prompt_tokens, 0)
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for step in range(max_new_tokens):
+            out.append(tok)
+            if S + step + 1 >= max_len or step == max_new_tokens - 1:
+                break
+            logits = run_tokens(tok, S + step)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        gen = jnp.concatenate(out, axis=1)
+        return gen, {"wall_s": time.time() - t0,
+                     "peak_resident_mb": self.engine.stats.peak_resident / 1e6}
+
+    # ------------------------------------------------------------ forward
+    def forward(self, batch: dict) -> Tuple[jax.Array, Dict]:
+        """Swapped forward pass. Returns (last-position logits, stats)."""
+        assert self.plan is not None, "call partition()/set_plan() first"
+        blocks = self.plan.blocks()
+        overlap = self.plan.m >= 2
+        eng = self.engine
+        x, positions = None, None
+
+        t_start = time.perf_counter()
+        fut = eng.prefetch([u.name for u in self.units[blocks[0][0]:blocks[0][1]]])
+        for bi, (lo, hi) in enumerate(blocks):
+            handle = fut.result()
+            if overlap and bi + 1 < len(blocks):
+                nlo, nhi = blocks[bi + 1]
+                fut = eng.prefetch([u.name for u in self.units[nlo:nhi]])
+            t0 = time.perf_counter()
+            for u, p in zip(self.units[lo:hi], handle.params):
+                x, positions = self._apply_unit(u, p, x, positions, batch)
+            x = jax.block_until_ready(x)
+            eng.record_exec(time.perf_counter() - t0)
+            eng.swap_out(handle)
+            if not overlap and bi + 1 < len(blocks):
+                nlo, nhi = blocks[bi + 1]       # serial: load AFTER freeing
+                fut = eng.prefetch([u.name for u in self.units[nlo:nhi]])
+        total = time.perf_counter() - t_start
+        if x.ndim == 3 and x.shape[-1] == self.cfg.vocab_size:
+            logits = x[:, -1:]
+        else:
+            logits = x
+        st = eng.stats
+        return logits, {
+            "latency_s": total,
+            "t_in": list(st.t_in), "t_ex": list(st.t_ex), "t_out": list(st.t_out),
+            "peak_resident_mb": st.peak_resident / 1e6,
+            "meta_mb": self.store.meta_bytes() / 1e6,
+        }
+
+    def close(self):
+        self.engine.close()

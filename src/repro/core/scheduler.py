@@ -1,0 +1,97 @@
+"""Multi-DNN scheduling on top of SwapNet (paper §6.2).
+
+Combines budget allocation (Eq. 1), per-model partitioning (Eq. 3/4 via the
+lookup table) and run-time adaptation (§6.2.2 "Adaptively Partition and
+Exchange Blocks", Fig. 18): lookup tables are precomputed per plausible block
+count; a budget change only re-selects a row (index math, no re-profiling),
+matching the paper's 60-70 ms adaptation path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.budget import ModelDemand, allocate_budgets
+from repro.core.cost_model import DelayModel, LayerInfo
+from repro.core.partition import (BlockPlan, PartitionPlanner, TableRow,
+                                  create_blocks, n_blocks_for_budget,
+                                  simulate_pipeline)
+
+
+@dataclass
+class ScheduledModel:
+    name: str
+    planner: PartitionPlanner
+    urgency: float = 1.0
+    budget: float = 0.0
+    plan: Optional[BlockPlan] = None
+    table: List[TableRow] = field(default_factory=list)
+
+    def demand(self) -> ModelDemand:
+        s = float(np.sum(self.planner.sizes))
+        f = float(np.sum(self.planner.flops))
+        return ModelDemand(self.name, s, self.planner.dm.t_ex(f), self.urgency)
+
+    def predicted_latency(self) -> float:
+        s, d, f = create_blocks(self.plan, self.planner.sizes,
+                                self.planner.depths, self.planner.flops)
+        return simulate_pipeline(s, d, f, self.planner.dm, self.planner.m)
+
+
+class MultiDNNScheduler:
+    """Paper §6.2: allocate budgets across DNNs, partition each, adapt on
+    budget changes. Each model runs independently (its own swap engine), the
+    m=2 block pipeline overlaps swap-in with execution."""
+
+    def __init__(self, models: Sequence[ScheduledModel], available: float,
+                 delta: float = 0.05):
+        self.models = list(models)
+        self.available = available
+        self.delta = delta
+        self.replan()
+
+    def replan(self) -> None:
+        budgets = allocate_budgets([m.demand() for m in self.models],
+                                   self.available)
+        # Eq. 1 is share-based and can dip below a model's physical floor
+        # (its largest layer). Lift those to their floor and take the lift
+        # from the models with the most headroom.
+        floors = [m.planner.min_feasible_budget(self.delta)
+                  for m in self.models]
+        deficit = sum(max(f - b, 0.0) for f, b in zip(floors, budgets))
+        if deficit > 0:
+            headroom = [max(b - f, 0.0) for f, b in zip(floors, budgets)]
+            hr_total = sum(headroom)
+            if hr_total < deficit:
+                raise ValueError(
+                    f"available memory {self.available/1e6:.1f} MB below the "
+                    f"sum of per-model floors {sum(floors)/1e6:.1f} MB")
+            budgets = [max(b, f) - (max(b - f, 0.0) / hr_total) * deficit
+                       for f, b in zip(floors, budgets)]
+        for m, b in zip(self.models, budgets):
+            m.budget = b
+            m.plan, m.table = m.planner.best_partition(b, self.delta)
+
+    def adapt(self, new_available: float) -> float:
+        """Runtime adaptation (Fig. 18): returns wall-time spent adapting.
+        Only re-selects lookup-table rows / re-runs the cheap partition search
+        — never re-profiles layers (operation 1 is one-time)."""
+        t0 = time.perf_counter()
+        self.available = new_available
+        self.replan()
+        return time.perf_counter() - t0
+
+    def summary(self) -> List[Dict]:
+        out = []
+        for m in self.models:
+            out.append({
+                "model": m.name,
+                "budget_mb": m.budget / 1e6,
+                "n_blocks": m.plan.n_blocks,
+                "points": m.plan.points,
+                "predicted_latency_s": m.predicted_latency(),
+            })
+        return out

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (
+    MODEL_AXIS, DATA_AXIS, POD_AXIS, PROD_AXIS_SIZES,
+    ParamDef, pspec, batch_spec, filter_spec, init_from_defs, specs_from_defs,
+    stack_specs,
+)

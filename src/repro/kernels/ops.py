@@ -1,0 +1,52 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the real kernels run; on CPU (this container, and any host-only test
+run) the wrappers run the kernels in interpret mode for small shapes or fall
+back to the jnp oracle — dry-run lowering for the host platform never embeds
+a Mosaic custom-call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.swap_linear import swap_linear as _swap_linear
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("act", "interpret"))
+def swap_linear(x, w, b=None, *, act: str = "none",
+                interpret: Optional[bool] = None):
+    """Weight-streaming linear; interpret=None -> auto (TPU real, CPU ref)."""
+    if interpret is None:
+        if _on_tpu():
+            return _swap_linear(x, w, b, act=act, interpret=False)
+        return _ref.swap_linear_ref(x, w, b, act=act)
+    return _swap_linear(x, w, b, act=act, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "softcap", "interpret"))
+def flash_attention(q, k, v, *, scale=None, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    interpret: Optional[bool] = None):
+    if interpret is None:
+        if _on_tpu():
+            return _flash(q, k, v, scale=scale, causal=causal, window=window,
+                          softcap=softcap, interpret=False)
+        return _ref.flash_attention_ref(q, k, v, scale=scale, causal=causal,
+                                        window=window, softcap=softcap)
+    return _flash(q, k, v, scale=scale, causal=causal, window=window,
+                  softcap=softcap, interpret=interpret)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def swap_linear_ref(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                    act: str = "none") -> jax.Array:
+    r = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        r = r + b.astype(jnp.float32)
+    if act == "silu":
+        r = r * jax.nn.sigmoid(r)
+    elif act == "gelu":
+        r = jax.nn.gelu(r, approximate=True)
+    return r.astype(x.dtype)
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
+             u: jax.Array) -> jax.Array:
+    """Literal per-step WKV6 recurrence. r,k,v,w_log: [BH,S,hd]; u: [BH,hd]."""
+    BH, S, hd = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w_log.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S_state, xs):
+        rt, kt, vt, lwt = xs
+        bonus = jnp.sum(rt * (uf * kt), axis=-1, keepdims=True)
+        y = jnp.einsum("bk,bkv->bv", rt, S_state) + bonus * vt
+        S_new = jnp.exp(lwt)[..., None] * S_state + kt[..., None] * vt[:, None, :]
+        return S_new, y
+
+    S0 = jnp.zeros((BH, hd, hd), jnp.float32)
+    xs = (rf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+          wf.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: Optional[float] = None, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jax.Array:
+    BH, S, hd = q.shape
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

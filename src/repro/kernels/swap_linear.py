@@ -1,0 +1,77 @@
+"""swap_linear: weight-streaming matmul — SwapNet's zero-copy swap at VMEM.
+
+TPU adaptation of the paper's core move (DESIGN.md §2): compute a layer whose
+weight matrix exceeds the fast-memory budget by streaming weight *blocks*
+through a double-buffered VMEM window. The Pallas grid pipeline issues the
+HBM->VMEM DMA for tile (k+1) while the MXU consumes tile k — exactly the
+paper's "swap-in of block i+1 overlaps execution of block i" (m = 2), with
+hardware DMA as the dedicated swap channel and no intermediate copies.
+
+VMEM working set (the "memory budget b"):
+    2 * (bm*bk + bk*bn + bn) * itemsize   (double-buffered inputs)
+    + bm*bn*4                             (fp32 accumulator scratch)
+Block shapes default to MXU-aligned multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        r = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if act == "silu":
+            r = r * jax.nn.sigmoid(r)
+        elif act == "gelu":
+            r = jax.nn.gelu(r, approximate=True)
+        o_ref[...] = r.astype(o_ref.dtype)
+
+
+def swap_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                *, act: str = "none", block_m: int = 256, block_n: int = 256,
+                block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """y = act(x @ w + b). x [M,K], w [K,N] (streamed), b [N] or None."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        f"shapes ({M},{K},{N}) not divisible by blocks ({bm},{bk},{bn})"
+    if b is None:
+        b = jnp.zeros((N,), x.dtype)
+    n_m, n_n, n_k = M // bm, N // bn, K // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, act=act),
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # activations
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # weight stream
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # bias
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b.reshape(1, N))
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 2) -> int:
+    """The VMEM budget this tiling claims (for kernel-level roofline notes)."""
+    return 2 * (bm * bk + bk * bn + bn) * itemsize + bm * bn * 4

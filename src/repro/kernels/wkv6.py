@@ -1,0 +1,81 @@
+"""wkv6: chunked RWKV6 (Finch) recurrence as a Pallas TPU kernel.
+
+The WKV state S [hd_k, hd_v] is the resident working set (VMEM scratch); the
+sequence streams through in chunks of Q — the same swap-a-block-through-a-
+window structure as the other kernels, here over TIME. Data-dependent
+per-channel decay is handled in log space with the chunk-local factorization
+(see models/ssm.py): all decay ratios inside a chunk are bounded by
+exp(Q * |W_LOG_MIN|), which fits fp32 for Q <= 16.
+
+Grid: (B*H, S/Q) — the chunk axis is sequential per head, carrying the state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+RWKV_CHUNK = 16
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
+            q: int, hd: int):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # [Q, hd]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = w_ref[0].astype(jnp.float32)         # per-step log decay (<= 0)
+    u = u_ref[0].astype(jnp.float32)          # [1, hd] bonus
+
+    l = jnp.cumsum(lw, axis=0)                # [Q, hd]
+    lprev = l - lw
+    r_dec = r * jnp.exp(lprev)
+    k_inv = k * jnp.exp(-l)
+    A = jax.lax.dot_general(r_dec, k_inv, (((1,), (1,)), ((), ())))  # [Q, Q]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    A = jnp.where(idx > jdx, A, 0.0)          # strict lower triangle
+    bonus = jnp.sum(r * (u * k), axis=1, keepdims=True)              # [Q, 1]
+    S = state_ref[...]
+    y = (jnp.dot(A, v, preferred_element_type=jnp.float32)
+         + bonus * v
+         + jnp.dot(r_dec, S, preferred_element_type=jnp.float32))
+    k_tail = k * jnp.exp(l[-1:] - l)
+    state_ref[...] = (jnp.exp(l[-1])[:, None] * S
+                      + jax.lax.dot_general(k_tail, v, (((0,), (0,)), ((), ()))))
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
+         u: jax.Array, *, chunk: int = RWKV_CHUNK,
+         interpret: bool = False) -> jax.Array:
+    """r,k,v,w_log: [BH, S, hd] (w_log = per-step log decay, clamped <= 0);
+    u: [BH, hd] bonus. Returns y [BH, S, hd]."""
+    BH, S, hd = r.shape
+    q = min(chunk, S)
+    assert S % q == 0, (S, q)
+    n_c = S // q
+
+    return pl.pallas_call(
+        functools.partial(_kernel, q=q, hd=hd),
+        grid=(BH, n_c),
+        in_specs=[
+            pl.BlockSpec((1, q, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, q, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, q, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, q, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w_log, u)

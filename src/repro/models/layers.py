@@ -1,0 +1,92 @@
+"""Shared layer primitives: norms, RoPE / M-RoPE, MLPs."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamDef
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w) if plus_one else w
+    return (x * scale).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+# ------------------------------------------------------------------ rotary
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                mrope_sections: Optional[Tuple[int, int, int]] = None) -> jax.Array:
+    """positions: [B, S] (rope) or [B, S, 3] (mrope) -> angles [B, S, head_dim/2]."""
+    half = head_dim // 2
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if mrope_sections is None:
+        pos = positions.astype(jnp.float32)
+        return pos[..., None] * inv_freq
+    # M-RoPE (Qwen2-VL): frequency slots are split into (t, h, w) sections,
+    # each driven by its own position stream. Static numpy: never traced.
+    import numpy as np
+    sec = np.asarray(mrope_sections)
+    assert int(sec.sum()) == half, (mrope_sections, half)
+    section_id = jnp.asarray(np.repeat(np.arange(3), sec))  # [half]
+    pos = positions.astype(jnp.float32)[..., section_id]   # [B, S, half]
+    return pos * inv_freq
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: [B, S, H, head_dim]; angles: [B, S, head_dim/2] (neox half-rotation)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1).astype(dt)
+
+
+# ------------------------------------------------------------------ MLP
+def mlp_defs(cfg: ModelConfig, d_in: int, d_hidden: int) -> dict:
+    if cfg.act in ("swiglu", "gelu_glu"):
+        return {
+            "wi0": ParamDef((d_in, d_hidden), ("residual", "tp")),
+            "wi1": ParamDef((d_in, d_hidden), ("residual", "tp")),
+            "wo": ParamDef((d_hidden, d_in), ("tp", "residual")),
+        }
+    return {
+        "wi": ParamDef((d_in, d_hidden), ("residual", "tp")),
+        "wo": ParamDef((d_hidden, d_in), ("tp", "residual")),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.act in ("swiglu", "gelu_glu"):
+        gate = x @ p["wi0"]
+        gate = jax.nn.silu(gate) if cfg.act == "swiglu" else jax.nn.gelu(gate, approximate=True)
+        return (gate * (x @ p["wi1"])) @ p["wo"]
+    h = x @ p["wi"]
+    if cfg.act == "relu_sq":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ p["wo"]
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

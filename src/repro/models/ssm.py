@@ -1,0 +1,304 @@
+"""State-space / linear-attention blocks: Mamba2 (chunked SSD) and RWKV6.
+
+Both ship two forms:
+  * chunked (train / prefill): matmul-heavy chunk-parallel scan — the
+    TPU-idiomatic MXU-friendly formulation (decay ratios kept <= 1 inside a
+    chunk so no log-space renormalization is needed for mamba2; rwkv6 bounds
+    per-step log-decay so chunk-local ratios stay in fp32 range);
+  * step (decode): single-token state update.
+
+Naive per-timestep references live in tests (and kernels/ref) to validate the
+chunked math.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamDef
+from repro.models.layers import rms_norm
+
+# rwkv6: per-step log-decay clamped to [W_LOG_MIN, W_LOG_MAX]; with chunk
+# size Q, |cumulative| <= Q*|W_LOG_MIN| must stay < log(float32 max) ~ 88.
+RWKV_CHUNK = 16
+W_LOG_MIN = -5.0
+W_LOG_MAX = -1e-4
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array,
+                  state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x [B,S,C], w [K,C]; state [B,K-1,C] (prev tail).
+    Returns (y [B,S,C], new_state [B,K-1,C])."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # [B, S+K-1, C]
+    y = sum(xp[:, k:k + S] * w[k] for k in range(K))
+    return y, xp[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+
+
+# ==========================================================================
+# Mamba2
+# ==========================================================================
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state
+
+
+def mamba2_defs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    s = cfg.ssm
+    d_inner, nh, ds = mamba2_dims(cfg)
+    return {
+        "norm": ParamDef((D,), (None,), init="ones"),
+        "wz": ParamDef((D, d_inner), ("residual", "tp")),
+        "wx": ParamDef((D, d_inner), ("residual", "tp")),
+        "wB": ParamDef((D, ds), ("residual", None)),
+        "wC": ParamDef((D, ds), ("residual", None)),
+        "wdt": ParamDef((D, nh), ("residual", "tp")),
+        "conv_w": ParamDef((s.d_conv, d_inner + 2 * ds), (None, None), scale=0.5),
+        "A_log": ParamDef((nh,), ("tp",), init="zeros"),
+        "dt_bias": ParamDef((nh,), ("tp",), init="zeros"),
+        "D_skip": ParamDef((nh,), ("tp",), init="ones"),
+        "norm_y": ParamDef((d_inner,), (None,), init="ones"),
+        "wo": ParamDef((d_inner, D), ("tp", "residual")),
+    }
+
+
+def _mamba2_inputs(cfg: ModelConfig, p: dict, x: jax.Array,
+                   conv_state: Optional[jax.Array]):
+    """Common projections + causal conv. x [B,S,D]."""
+    d_inner, nh, ds = mamba2_dims(cfg)
+    B, S, D = x.shape
+    z = x @ p["wz"]
+    xbc = jnp.concatenate([x @ p["wx"], x @ p["wB"], x @ p["wC"]], axis=-1)
+    xbc, new_conv = conv1d_causal(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner].reshape(B, S, nh, cfg.ssm.head_dim)
+    Bv = xbc[..., d_inner:d_inner + ds]
+    Cv = xbc[..., d_inner + ds:]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"].astype(jnp.float32))))  # [B,S,nh] in (0,1)
+    return z, xs, Bv, Cv, dt, a, new_conv
+
+
+def mamba2_chunked(cfg: ModelConfig, p: dict, x: jax.Array,
+                   h0: Optional[jax.Array] = None,
+                   conv_state: Optional[jax.Array] = None):
+    """Chunked SSD. x [B,S,D] -> (y [B,S,D], (h [B,nh,hd,ds], conv_state))."""
+    d_inner, nh, ds = mamba2_dims(cfg)
+    hd = cfg.ssm.head_dim
+    B, S, D = x.shape
+    Q = min(cfg.ssm.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    z, xs, Bv, Cv, dt, a, new_conv = _mamba2_inputs(cfg, p, x, conv_state)
+
+    # chunk views: [B, nc, Q, ...] -> scan over nc
+    def ch(t):
+        return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    # inputs stay in the compute dtype through the chunk reshape (§Perf:
+    # halves the full-sequence staging bytes); upcast happens per chunk
+    xs_c, B_c, C_c, dt_c, a_c = map(ch, (xs, Bv, Cv, dt, a))
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]          # i<=t
+
+    def body(h, xs_i):
+        xq, Bq, Cq, dtq, aq = xs_i                 # [B,Q,nh,hd],[B,Q,ds],...,[B,Q,nh]
+        xq = xq.astype(jnp.float32)
+        Bq = Bq.astype(jnp.float32)
+        Cq = Cq.astype(jnp.float32)
+        l = jnp.cumsum(jnp.log(jnp.maximum(aq, 1e-37)), axis=1)   # [B,Q,nh]
+        # intra-chunk: M[t,i,h] = (C_t.B_i) * exp(l_t - l_i) * dt_i, i<=t
+        cb = jnp.einsum("btd,bid->bti", Cq, Bq)
+        ratio = jnp.exp(l[:, :, None, :] - l[:, None, :, :])      # [B,Q,Q,nh]
+        M = cb[..., None] * ratio * dtq[:, None, :, :]
+        M = jnp.where(causal[None, :, :, None], M, 0.0)
+        y_intra = jnp.einsum("btin,binh->btnh", M, xq)
+        # inter-chunk: y_t += exp(l_t) * C_t . h
+        y_inter = jnp.einsum("btd,bnhd,btn->btnh", Cq, h, jnp.exp(l))
+        # state update: h' = exp(l_Q) h + sum_i exp(l_Q - l_i) dt_i x_i B_i^T
+        w_state = jnp.exp(l[:, -1:, :] - l) * dtq                 # [B,Q,nh] <=1
+        h_new = (jnp.exp(l[:, -1])[:, :, None, None] * h
+                 + jnp.einsum("btnh,btd,btn->bnhd", xq, Bq, w_state))
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    # remat the chunk body: the [B,Q,Q,nh] decay/score intermediates are
+    # recomputed in backward instead of being saved for all S/Q chunks
+    h_final, y = jax.lax.scan(jax.checkpoint(body), h0,
+                              (xs_c, B_c, C_c, dt_c, a_c))
+    y = y.swapaxes(0, 1).reshape(B, S, nh, hd)
+    y = (y.astype(jnp.float32)
+         + xs.astype(jnp.float32) * p["D_skip"][:, None]).reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_y"], cfg.norm_eps)
+    return (y.astype(x.dtype) @ p["wo"]), (h_final, new_conv)
+
+
+def mamba2_step(cfg: ModelConfig, p: dict, x: jax.Array,
+                h: jax.Array, conv_state: jax.Array):
+    """Single-token decode. x [B,1,D], h [B,nh,hd,ds], conv_state [B,K-1,C]."""
+    d_inner, nh, ds = mamba2_dims(cfg)
+    hd = cfg.ssm.head_dim
+    B = x.shape[0]
+    z, xs, Bv, Cv, dt, a, new_conv = _mamba2_inputs(cfg, p, x, conv_state)
+    xq = xs[:, 0].astype(jnp.float32)              # [B,nh,hd]
+    Bq = Bv[:, 0].astype(jnp.float32)              # [B,ds]
+    Cq = Cv[:, 0].astype(jnp.float32)
+    dtq, aq = dt[:, 0], a[:, 0]                    # [B,nh]
+    h = aq[:, :, None, None] * h + jnp.einsum(
+        "bnh,bd,bn->bnhd", xq, Bq, dtq)
+    y = jnp.einsum("bnhd,bd->bnh", h, Cq) + xq * p["D_skip"][:, None]
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_y"], cfg.norm_eps)
+    return (y.astype(x.dtype) @ p["wo"]), (h, new_conv)
+
+
+# ==========================================================================
+# RWKV6 ("Finch") — data-dependent decay, token shift
+# ==========================================================================
+def rwkv6_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.ssm.head_dim
+    return cfg.d_model // hd, hd                   # (n_heads, head_dim)
+
+
+def rwkv6_defs(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    nh, hd = rwkv6_dims(cfg)
+    lora = 64
+    return {
+        "ln1_w": ParamDef((D,), (None,), init="ones"),
+        "ln1_b": ParamDef((D,), (None,), init="zeros"),
+        "ln2_w": ParamDef((D,), (None,), init="ones"),
+        "ln2_b": ParamDef((D,), (None,), init="zeros"),
+        # time-mix token-shift interpolators
+        "mu_r": ParamDef((D,), (None,), init="small"),
+        "mu_k": ParamDef((D,), (None,), init="small"),
+        "mu_v": ParamDef((D,), (None,), init="small"),
+        "mu_g": ParamDef((D,), (None,), init="small"),
+        "mu_w": ParamDef((D,), (None,), init="small"),
+        # data-dependent decay lora (the Finch contribution)
+        "w_base": ParamDef((D,), (None,), init="zeros"),
+        "w_lora_a": ParamDef((D, lora), ("residual", None), init="small"),
+        "w_lora_b": ParamDef((lora, D), (None, None), init="small"),
+        "wr": ParamDef((D, D), ("residual", "tp")),
+        "wk": ParamDef((D, D), ("residual", "tp")),
+        "wv": ParamDef((D, D), ("residual", "tp")),
+        "wg": ParamDef((D, D), ("residual", "tp")),
+        "u": ParamDef((nh, hd), (None, None), init="small"),
+        "ln_x_w": ParamDef((D,), (None,), init="ones"),
+        "ln_x_b": ParamDef((D,), (None,), init="zeros"),
+        "wo": ParamDef((D, D), ("tp", "residual")),
+        # channel mix
+        "mu_ck": ParamDef((D,), (None,), init="small"),
+        "mu_cr": ParamDef((D,), (None,), init="small"),
+        "ck": ParamDef((D, F), ("residual", "tp")),
+        "cv": ParamDef((F, D), ("tp", "residual")),
+        "cr": ParamDef((D, D), ("residual", "tp")),
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x[t] -> x[t-1]; prev [B,1,D] seeds position 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_time_inputs(cfg, p, xn, shift_prev):
+    """Projections for the time-mix half. xn is post-ln1. Returns fp32."""
+    nh, hd = rwkv6_dims(cfg)
+    B, S, D = xn.shape
+    xp = _shift(xn, shift_prev)
+    def lerp(mu):
+        return xn + (xp - xn) * mu
+    r = (lerp(p["mu_r"]) @ p["wr"]).reshape(B, S, nh, hd).astype(jnp.float32)
+    k = (lerp(p["mu_k"]) @ p["wk"]).reshape(B, S, nh, hd).astype(jnp.float32)
+    v = (lerp(p["mu_v"]) @ p["wv"]).reshape(B, S, nh, hd).astype(jnp.float32)
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["wg"])
+    w_log = (p["w_base"]
+             + jnp.tanh(lerp(p["mu_w"]) @ p["w_lora_a"]) @ p["w_lora_b"])
+    logw = jnp.clip(-jnp.exp(w_log.astype(jnp.float32)), W_LOG_MIN, W_LOG_MAX)
+    logw = logw.reshape(B, S, nh, hd)
+    return r, k, v, g, logw, xn[:, -1:]
+
+
+def rwkv6_time_mix_chunked(cfg: ModelConfig, p: dict, xn: jax.Array,
+                           S0: Optional[jax.Array] = None,
+                           shift_prev: Optional[jax.Array] = None):
+    """xn [B,S,D] (post-ln1). Returns (out [B,S,D], (S [B,nh,hd,hd], shift))."""
+    nh, hd = rwkv6_dims(cfg)
+    B, S, D = xn.shape
+    Q = min(RWKV_CHUNK, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    r, k, v, g, logw, shift_out = _rwkv_time_inputs(cfg, p, xn, shift_prev)
+    if S0 is None:
+        S0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+
+    def ch(t):
+        return t.reshape(B, nc, Q, nh, hd).swapaxes(0, 1)
+    rc, kc, vc, wc = map(ch, (r, k, v, logw))
+    idx = jnp.arange(Q)
+    strict = idx[:, None] > idx[None, :]           # i < t
+
+    def body(Scur, xs):
+        rq, kq, vq, lw = xs                        # [B,Q,nh,hd]
+        l = jnp.cumsum(lw, axis=1)                 # [B,Q,nh,hd] (<=0, >= Q*W_LOG_MIN)
+        lprev = l - lw                             # l_{t-1} (0 at t=0)
+        r_dec = rq * jnp.exp(lprev)                # bounded <= |r|
+        k_inv = kq * jnp.exp(-l)                   # bounded by exp(Q*|W_LOG_MIN|)
+        A = jnp.einsum("btnh,binh->btin", r_dec, k_inv)
+        A = jnp.where(strict[None, :, :, None], A, 0.0)
+        bonus = jnp.einsum("btnh,btnh->btn", rq, p["u"][None, None] * kq)
+        y = (jnp.einsum("btin,binh->btnh", A, vq)
+             + bonus[..., None] * vq
+             + jnp.einsum("btnh,bnhv->btnv", r_dec, Scur))
+        k_tail = kq * jnp.exp(l[:, -1:] - l)       # ratios <= 1
+        S_new = jnp.exp(l[:, -1])[..., None] * Scur + jnp.einsum(
+            "btnh,btnv->bnhv", k_tail, vq)
+        return S_new, y
+
+    S_fin, y = jax.lax.scan(body, S0, (rc, kc, vc, wc))
+    y = y.swapaxes(0, 1).reshape(B, S, D)
+    from repro.models.layers import layer_norm
+    y = layer_norm(y, p["ln_x_w"], p["ln_x_b"], eps=1e-5)
+    out = (y.astype(xn.dtype) * g) @ p["wo"]
+    return out, (S_fin, shift_out)
+
+
+def rwkv6_time_mix_step(cfg: ModelConfig, p: dict, xn: jax.Array,
+                        Scur: jax.Array, shift_prev: jax.Array):
+    """Single token. xn [B,1,D]; Scur [B,nh,hd,hd]; shift_prev [B,1,D]."""
+    nh, hd = rwkv6_dims(cfg)
+    B = xn.shape[0]
+    r, k, v, g, logw, shift_out = _rwkv_time_inputs(cfg, p, xn, shift_prev)
+    rq, kq, vq, lw = r[:, 0], k[:, 0], v[:, 0], logw[:, 0]   # [B,nh,hd]
+    bonus = jnp.einsum("bnh,bnh->bn", rq, p["u"][None] * kq)
+    y = (jnp.einsum("bnh,bnhv->bnv", rq, Scur) + bonus[..., None] * vq)
+    S_new = jnp.exp(lw)[..., None] * Scur + kq[..., None] * vq[..., None, :]
+    y = y.reshape(B, 1, cfg.d_model)
+    from repro.models.layers import layer_norm
+    y = layer_norm(y, p["ln_x_w"], p["ln_x_b"], eps=1e-5)
+    out = (y.astype(xn.dtype) * g) @ p["wo"]
+    return out, (S_new, shift_out)
+
+
+def rwkv6_channel_mix(cfg: ModelConfig, p: dict, xn: jax.Array,
+                      shift_prev: Optional[jax.Array] = None):
+    """xn [B,S,D] (post-ln2). Returns (out, shift_state)."""
+    xp = _shift(xn, shift_prev)
+    xk = xn + (xp - xn) * p["mu_ck"]
+    xr = xn + (xp - xn) * p["mu_cr"]
+    h = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (h @ p["cv"]), xn[:, -1:]

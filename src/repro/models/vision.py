@@ -1,0 +1,205 @@
+"""Scaled-down versions of the paper's workloads (VGG / ResNet / YOLO / FCN)
+for the scenario benchmarks (Figs. 11-13). Pure JAX conv nets described as
+layer lists so they slot straight into the SwapNet unit/partition machinery.
+
+Scaled ~20x from the paper's sizes (CPU container) but keeping the structural
+traits the paper leans on: VGG's huge unbalanced fc layer, ResNet's many thin
+layers, conv-only YOLO/FCN.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Layer:
+    kind: str                 # conv | res | pool | gap | fc
+    cin: int = 0
+    cout: int = 0
+    k: int = 3
+    stride: int = 1
+
+
+def vgg_sim() -> Tuple[str, List[Layer], int]:
+    """VGG-ish: conv stack + dominant fc (the paper's 'largest layer 392MB')."""
+    chans = [(3, 32), (32, 64), (64, 128), (128, 128), (128, 256), (256, 256)]
+    layers = []
+    for i, (a, b) in enumerate(chans):
+        layers.append(Layer("conv", a, b, 3, 1))
+        if i % 2 == 1:
+            layers.append(Layer("pool"))
+    layers.append(Layer("gap"))
+    layers += [Layer("fc", 256, 4096), Layer("fc", 4096, 1024),
+               Layer("fc", 1024, 100)]
+    return "vgg_sim", layers, 32
+
+
+def resnet_sim(depth: int = 34) -> Tuple[str, List[Layer], int]:
+    """ResNet-ish: many thin residual layers (hard to partition, paper §6.2)."""
+    layers = [Layer("conv", 3, 32, 3, 1)]
+    c = 32
+    for stage, blocks in enumerate([3, 4, 6, 3][:max(2, depth // 10)]):
+        for b in range(blocks):
+            layers.append(Layer("res", c, c, 3, 1))
+        if stage < 3:
+            layers.append(Layer("conv", c, c * 2, 3, 2))
+            c *= 2
+    layers += [Layer("gap"), Layer("fc", c, 100)]
+    return "resnet_sim", layers, 32
+
+
+def yolo_sim() -> Tuple[str, List[Layer], int]:
+    layers = [Layer("conv", 3, 32, 3, 1)]
+    c = 32
+    for _ in range(4):
+        layers.append(Layer("conv", c, c * 2, 3, 2))
+        layers.append(Layer("res", c * 2, c * 2, 3, 1))
+        c *= 2
+    layers.append(Layer("conv", c, 255, 1, 1))      # detection head
+    return "yolo_sim", layers, 64
+
+def fcn_sim() -> Tuple[str, List[Layer], int]:
+    layers = []
+    c = 3
+    for nc in (32, 64, 128):
+        layers.append(Layer("conv", c, nc, 3, 2))
+        c = nc
+    for nc in (128, 64):
+        layers.append(Layer("conv", c, nc, 3, 1))
+        c = nc
+    layers.append(Layer("conv", c, 21, 1, 1))       # seg classes
+    return "fcn_sim", layers, 64
+
+
+MODELS: Dict[str, Callable] = {"vgg": vgg_sim, "resnet": resnet_sim,
+                               "yolo": yolo_sim, "fcn": fcn_sim}
+
+
+# ------------------------------------------------------------------ init/apply
+def init_layer(l: Layer, key) -> dict:
+    if l.kind in ("conv", "res"):
+        w = jax.random.normal(key, (l.k, l.k, l.cin, l.cout)) \
+            * (l.k * l.k * l.cin) ** -0.5
+        return {"w": w, "b": jnp.zeros((l.cout,))}
+    if l.kind == "fc":
+        w = jax.random.normal(key, (l.cin, l.cout)) * l.cin ** -0.5
+        return {"w": w, "b": jnp.zeros((l.cout,))}
+    return {}
+
+
+def init_convnet(layers: Sequence[Layer], key) -> List[dict]:
+    return [init_layer(l, jax.random.fold_in(key, i))
+            for i, l in enumerate(layers)]
+
+
+def _conv(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def apply_layer(l: Layer, p: dict, x: jax.Array) -> jax.Array:
+    if l.kind == "conv":
+        return jax.nn.relu(_conv(x, p["w"], p["b"], l.stride))
+    if l.kind == "res":
+        return jax.nn.relu(x + _conv(x, p["w"], p["b"], 1))
+    if l.kind == "pool":
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    if l.kind == "gap":
+        return jnp.mean(x, axis=(1, 2))
+    if l.kind == "fc":
+        return x @ p["w"] + p["b"]
+    raise ValueError(l.kind)
+
+
+def apply_convnet(layers, params, x):
+    for l, p in zip(layers, params):
+        x = apply_layer(l, p, x)
+    return x
+
+
+def layer_flops_conv(l: Layer, hw: int, batch: int) -> float:
+    if l.kind in ("conv", "res"):
+        out_hw = hw // l.stride
+        return 2.0 * batch * out_hw * out_hw * l.k * l.k * l.cin * l.cout
+    if l.kind == "fc":
+        return 2.0 * batch * l.cin * l.cout
+    return 1.0 * batch * hw * hw
+
+
+def trace_hw(layers: Sequence[Layer], hw: int) -> List[int]:
+    """Input spatial size seen by each layer."""
+    out, cur = [], hw
+    for l in layers:
+        out.append(cur)
+        if l.kind == "pool" or (l.kind == "conv" and l.stride == 2):
+            cur = cur // 2
+        if l.kind == "gap":
+            cur = 1
+    return out
+
+
+# ------------------------------------------------------------------ baselines
+def prune_convnet(layers: Sequence[Layer], params: List[dict],
+                  keep_frac: float) -> Tuple[List[Layer], List[dict]]:
+    """Torch-Pruning-style structured magnitude pruning: keep the top
+    ``keep_frac`` output channels by L2 norm (lossy — the paper's TPrg arm)."""
+    new_layers, new_params = [], []
+    kept_prev: Optional[np.ndarray] = None
+    for l, p in zip(layers, params):
+        if l.kind == "conv":
+            w = np.asarray(p["w"])
+            if kept_prev is not None:
+                w = w[:, :, kept_prev, :]
+            norms = np.linalg.norm(w.reshape(-1, w.shape[-1]), axis=0)
+            k = max(1, int(round(l.cout * keep_frac)))
+            keep = np.sort(np.argsort(norms)[-k:])
+            new_layers.append(dataclasses.replace(
+                l, cin=w.shape[2], cout=k))
+            new_params.append({"w": jnp.asarray(w[..., keep]),
+                               "b": jnp.asarray(np.asarray(p["b"])[keep])})
+            kept_prev = keep
+        elif l.kind == "res":
+            w = np.asarray(p["w"])
+            if kept_prev is not None:
+                w = w[:, :, kept_prev, :][..., kept_prev]
+            c = w.shape[2]
+            new_layers.append(dataclasses.replace(l, cin=c, cout=c))
+            new_params.append({"w": jnp.asarray(w),
+                               "b": jnp.asarray(np.asarray(p["b"])[kept_prev])
+                               if kept_prev is not None else p["b"]})
+        elif l.kind == "fc":
+            w = np.asarray(p["w"])
+            if kept_prev is not None:          # first fc after gap: slice cin
+                w = w[kept_prev, :]
+                kept_prev = None
+            new_layers.append(dataclasses.replace(l, cin=w.shape[0]))
+            new_params.append({"w": jnp.asarray(w), "b": p["b"]})
+        else:
+            new_layers.append(l)
+            new_params.append(p)
+    return new_layers, new_params
+
+
+def apply_convnet_channel_split(layers, params, x, groups: int = 4):
+    """DCha baseline: convolution output channels computed in ``groups``
+    sequential slices (1/groups weight memory at a time, combine overhead)."""
+    for l, p in zip(layers, params):
+        if l.kind == "conv" and l.cout >= groups:
+            outs = []
+            step = l.cout // groups
+            for g in range(groups):
+                sl = slice(g * step, (g + 1) * step if g < groups - 1 else l.cout)
+                outs.append(_conv(x, p["w"][..., sl], p["b"][sl], l.stride))
+            x = jax.nn.relu(jnp.concatenate(outs, axis=-1))
+        else:
+            x = apply_layer(l, p, x)
+    return x

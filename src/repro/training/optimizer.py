@@ -1,0 +1,67 @@
+"""AdamW + cosine schedule, pure JAX (no optax dependency)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params) -> Tuple[dict, dict]:
+    zeros = lambda t: jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), t)
+    return zeros(params), zeros(params)
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, mu, nu, step: jax.Array, cfg: OptConfig):
+    """Returns (params, mu, nu, metrics). Decoupled weight decay; global-norm
+    clipping; bias-corrected moments kept in fp32."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(step, cfg)
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (u + decay)
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, mu, nu)
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    p_new = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    mu_new = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    nu_new = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+    return p_new, mu_new, nu_new, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,34 @@
+"""Training step + state (used by launch/train.py and the dry-run)."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import Model
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+
+
+def TrainState(params) -> dict:
+    mu, nu = adamw_init(params)
+    return {"params": params, "mu": mu, "nu": nu,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(model: Model) -> dict:
+    ps = model.param_specs()
+    return {"params": ps, "mu": ps, "nu": ps, "step": P()}
+
+
+def make_train_step(model: Model, opt: OptConfig) -> Callable:
+    def train_step(state: dict, batch: dict) -> Tuple[dict, dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state["params"], batch)
+        p, mu, nu, om = adamw_update(state["params"], grads, state["mu"],
+                                     state["nu"], state["step"], opt)
+        new_state = {"params": p, "mu": mu, "nu": nu,
+                     "step": state["step"] + 1}
+        return new_state, {**metrics, **om}
+    return train_step

@@ -1,0 +1,36 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override is
+# dryrun.py-only, per the brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.models.transformer import input_specs
+
+
+def make_batch(cfg, shape: ShapeConfig, seed: int = 0):
+    """Random batch matching input_specs."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, v in input_specs(cfg, shape).items():
+        if v.dtype == jnp.int32:
+            if k == "pos":
+                out[k] = jnp.zeros(v.shape, jnp.int32)
+            elif k == "positions":
+                out[k] = jnp.zeros(v.shape, jnp.int32)
+            else:
+                out[k] = jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, v.shape), jnp.int32)
+        elif v.dtype == jnp.bool_:
+            out[k] = jnp.asarray(rng.random(v.shape) < 0.3)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 0.5, v.shape), v.dtype)
+    return out

@@ -1,0 +1,57 @@
+"""Dry-run smoke: the launch path works in a subprocess (512 host devices).
+One real combination end-to-end; skip rules honored. Marked slow-ish but
+bounded (decode lowering compiles in seconds)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(args, timeout=540):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("JAX_PLATFORMS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=timeout)
+
+
+def test_dryrun_decode_compiles(tmp_path):
+    r = _run(["--arch", "qwen2.5-3b", "--shape", "decode_32k",
+              "--out", str(tmp_path)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    f = tmp_path / "qwen2.5-3b__decode_32k__16x16.json"
+    data = json.loads(f.read_text())
+    assert data["status"] == "ok"
+    assert data["cost_analysis"]["flops"] > 0
+    assert data["memory_analysis"]["temp_size_in_bytes"] > 0
+    assert sum(v["count"] for v in data["collectives"].values()) > 0
+
+
+def test_dryrun_respects_skip_rules():
+    """Skip rules (DESIGN.md §5): encoder-only has no decode; pure
+    full-attention archs have no long_500k; SWA/SSM/hybrid do."""
+    from repro.configs import ARCHS, SHAPES, applicable
+    assert not applicable(ARCHS["hubert-xlarge"], SHAPES["decode_32k"])
+    assert not applicable(ARCHS["granite-20b"], SHAPES["long_500k"])
+    assert applicable(ARCHS["h2o-danube-3-4b"], SHAPES["long_500k"])
+    assert applicable(ARCHS["zamba2-7b"], SHAPES["long_500k"])
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collectives
+    hlo = """
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[2,1024]{1,0} all-gather(%y), dimensions={1}
+  ROOT %r = (f32[4]{0}, f32[4]{0}) all-to-all(%a, %b)
+  %notacoll = f32[8]{0} add(%c, %d)
+"""
+    got = parse_collectives(hlo)
+    assert got["all-reduce"]["count"] == 1
+    assert got["all-reduce"]["bytes"] == 16 * 128 * 4
+    assert got["all-gather"]["bytes"] == 2 * 1024 * 2
+    assert got["all-to-all"]["count"] == 1
+    assert got["all-to-all"]["bytes"] == 32

@@ -1,0 +1,117 @@
+"""Per-kernel shape/dtype sweeps in interpret mode vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.swap_linear import swap_linear, vmem_bytes
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 512, 128),
+                                   (128, 1024, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["none", "silu"])
+def test_swap_linear_sweep(M, K, N, dtype, act):
+    kq, kw, kb = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(kq, (M, K), dtype) * 0.5
+    w = jax.random.normal(kw, (K, N), dtype) * (K ** -0.5)
+    b = jax.random.normal(kb, (N,), dtype) * 0.1
+    got = swap_linear(x, w, b, act=act, block_m=128, block_n=128,
+                      block_k=128, interpret=True)
+    want = ref.swap_linear_ref(x, w, b, act=act)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_swap_linear_vmem_budget():
+    # default tiling must fit a 16 MB v5e VMEM twice over (headroom)
+    assert vmem_bytes(256, 256, 512) < 8 * 1024 * 1024
+
+
+@pytest.mark.parametrize("S,hd", [(256, 64), (512, 128), (256, 80)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None), (True, 128, None), (True, None, 50.0),
+    (False, None, None), (True, 64, 30.0)])
+def test_flash_attention_sweep(S, hd, dtype, causal, window, softcap):
+    BH = 4
+    kq, kk, kv = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(kq, (BH, S, hd), dtype) * 0.5
+    k = jax.random.normal(kk, (BH, S, hd), dtype) * 0.5
+    v = jax.random.normal(kv, (BH, S, hd), dtype) * 0.5
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("S,hd", [(64, 64), (128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_sweep(S, hd, dtype):
+    from repro.kernels.wkv6 import wkv6
+    BH = 4
+    keys = jax.random.split(jax.random.key(3), 5)
+    r = jax.random.normal(keys[0], (BH, S, hd), dtype) * 0.5
+    k = jax.random.normal(keys[1], (BH, S, hd), dtype) * 0.5
+    v = jax.random.normal(keys[2], (BH, S, hd), dtype) * 0.5
+    w_log = jnp.clip(-jnp.exp(jax.random.normal(keys[3], (BH, S, hd))),
+                     -5.0, -1e-4).astype(dtype)
+    u = (jax.random.normal(keys[4], (BH, hd)) * 0.1).astype(dtype)
+    got = wkv6(r, k, v, w_log, u, interpret=True)
+    want = ref.wkv6_ref(r, k, v, w_log, u)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **(_tol(dtype) if dtype != jnp.bfloat16
+                                  else dict(rtol=5e-2, atol=5e-2)))
+
+
+def test_wkv6_matches_model_rwkv():
+    """Kernel agrees with the model's chunked WKV (same factorization)."""
+    import dataclasses
+    from repro.configs import ARCHS
+    from repro.distributed.sharding import init_from_defs
+    from repro.models import ssm
+    cfg = dataclasses.replace(ARCHS["rwkv6-3b"].reduced(), dtype="float32")
+    p = init_from_defs(ssm.rwkv6_defs(cfg), jax.random.key(0))
+    B, S = 2, 32
+    xn = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model)) * 0.5
+    r, k, v, g, logw, _ = ssm._rwkv_time_inputs(cfg, p, xn, None)
+    nh, hd = ssm.rwkv6_dims(cfg)
+    from repro.kernels.wkv6 import wkv6
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * nh, S, hd)
+    u = jnp.broadcast_to(p["u"][None], (B, nh, hd)).reshape(B * nh, hd)
+    y_kernel = wkv6(flat(r), flat(k), flat(v), flat(logw), u, interpret=True)
+    y_ref = ref.wkv6_ref(flat(r), flat(k), flat(v), flat(logw), u)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_matches_model_attention():
+    """The kernel oracle agrees with the model's chunked online attention."""
+    from repro.models.attention import online_attention
+    B, S, H, hd = 2, 256, 4, 64
+    kq, kk, kv = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(kq, (B, S, H, hd)) * 0.5
+    k = jax.random.normal(kk, (B, S, H, hd)) * 0.5
+    v = jax.random.normal(kv, (B, S, H, hd)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    got = online_attention(q, k, v, pos, None, causal=True, window=None,
+                           scale=hd ** -0.5, logit_cap=None, chunk=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    want = ref.flash_attention_ref(qf, kf, vf, causal=True)
+    want = want.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,83 @@
+"""Chunked SSM forms vs naive per-timestep recurrences (the math oracle)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.distributed.sharding import init_from_defs
+from repro.models import ssm
+
+
+def _naive_mamba2(cfg, p, x):
+    """Literal per-step recurrence."""
+    d_inner, nh, ds = ssm.mamba2_dims(cfg)
+    hd = cfg.ssm.head_dim
+    B, S, D = x.shape
+    z, xs, Bv, Cv, dt, a, _ = ssm._mamba2_inputs(cfg, p, x, None)
+    h = jnp.zeros((B, nh, hd, ds))
+    ys = []
+    for t in range(S):
+        h = a[:, t][:, :, None, None] * h + jnp.einsum(
+            "bnh,bd,bn->bnhd", xs[:, t].astype(jnp.float32),
+            Bv[:, t].astype(jnp.float32), dt[:, t])
+        ys.append(jnp.einsum("bnhd,bd->bnh", h, Cv[:, t].astype(jnp.float32)))
+    y = jnp.stack(ys, 1) + xs.astype(jnp.float32) * p["D_skip"][:, None]
+    from repro.models.layers import rms_norm
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_y"], cfg.norm_eps)
+    return y.astype(x.dtype) @ p["wo"], h
+
+
+def test_mamba2_chunked_matches_naive():
+    cfg = dataclasses.replace(ARCHS["zamba2-7b"].reduced(), dtype="float32")
+    p = init_from_defs(ssm.mamba2_defs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model)) * 0.5
+    y_naive, h_naive = _naive_mamba2(cfg, p, x)
+    y_chunk, (h_chunk, _) = ssm.mamba2_chunked(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_naive),
+                               rtol=1e-4, atol=1e-4)
+
+
+def _naive_rwkv6(cfg, p, xn):
+    nh, hd = ssm.rwkv6_dims(cfg)
+    B, S, D = xn.shape
+    r, k, v, g, logw, _ = ssm._rwkv_time_inputs(cfg, p, xn, None)
+    Scur = jnp.zeros((B, nh, hd, hd))
+    ys = []
+    for t in range(S):
+        rq, kq, vq, lw = r[:, t], k[:, t], v[:, t], logw[:, t]
+        bonus = jnp.einsum("bnh,bnh->bn", rq, p["u"][None] * kq)
+        ys.append(jnp.einsum("bnh,bnhv->bnv", rq, Scur) + bonus[..., None] * vq)
+        Scur = jnp.exp(lw)[..., None] * Scur + kq[..., None] * vq[..., None, :]
+    y = jnp.stack(ys, 1).reshape(B, S, D)
+    from repro.models.layers import layer_norm
+    y = layer_norm(y, p["ln_x_w"], p["ln_x_b"], eps=1e-5)
+    return (y.astype(xn.dtype) * g) @ p["wo"], Scur
+
+
+def test_rwkv6_chunked_matches_naive():
+    cfg = dataclasses.replace(ARCHS["rwkv6-3b"].reduced(), dtype="float32")
+    p = init_from_defs(ssm.rwkv6_defs(cfg), jax.random.key(0))
+    xn = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model)) * 0.5
+    y_naive, S_naive = _naive_rwkv6(cfg, p, xn)
+    y_chunk, (S_chunk, _) = ssm.rwkv6_time_mix_chunked(cfg, p, xn)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S_chunk), np.asarray(S_naive),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv6_decay_is_data_dependent():
+    """Finch's contribution: different inputs -> different decay."""
+    cfg = dataclasses.replace(ARCHS["rwkv6-3b"].reduced(), dtype="float32")
+    p = init_from_defs(ssm.rwkv6_defs(cfg), jax.random.key(0))
+    x1 = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model))
+    x2 = jax.random.normal(jax.random.key(2), (1, 8, cfg.d_model))
+    *_, w1, _ = ssm._rwkv_time_inputs(cfg, p, x1, None)
+    *_, w2, _ = ssm._rwkv_time_inputs(cfg, p, x2, None)
+    assert not np.allclose(np.asarray(w1), np.asarray(w2))

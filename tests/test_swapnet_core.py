@@ -1,0 +1,157 @@
+"""SwapNet core: unit + property tests (hypothesis) for the system invariants."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.budget import ModelDemand, allocate_budgets
+from repro.core.cost_model import DelayModel, LayerInfo
+from repro.core.partition import (BlockPlan, PartitionPlanner,
+                                  create_blocks, get_layers,
+                                  n_blocks_for_budget, simulate_pipeline)
+from repro.core.skeleton import assemble, assemble_dummy, assemble_np, flatten_params
+
+
+# ------------------------------------------------------------------ skeleton
+@st.composite
+def param_trees(draw):
+    n = draw(st.integers(1, 6))
+    tree = {}
+    for i in range(n):
+        shape = tuple(draw(st.lists(st.integers(1, 7), min_size=1, max_size=3)))
+        dt = draw(st.sampled_from(["float32", "bfloat16", "int32"]))
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        if dt == "int32":
+            arr = rng.integers(-100, 100, shape).astype(np.int32)
+        else:
+            arr = rng.normal(0, 1, shape).astype(jnp.dtype(dt).type)
+        tree[f"p{i}"] = arr if i % 2 == 0 else {"nested": arr}
+    return tree
+
+
+@settings(max_examples=30, deadline=None)
+@given(param_trees())
+def test_skeleton_roundtrip(tree):
+    """flatten -> assemble (all three modes) reproduces the tree exactly."""
+    buf, skel = flatten_params(tree)
+    assert skel.depth == len(jax.tree.leaves(tree))
+    for rebuilt in (assemble_np(skel, buf), assemble_dummy(skel, buf),
+                    jax.jit(lambda b: assemble(skel, b))(jnp.asarray(buf))):
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(rebuilt)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32) if a.dtype
+                                          == jnp.bfloat16 else np.asarray(a),
+                                          np.asarray(b, np.float32) if b.dtype
+                                          == jnp.bfloat16 else np.asarray(b))
+
+
+def test_skeleton_is_small():
+    tree = {"w": np.zeros((1000, 1000), np.float32)}
+    buf, skel = flatten_params(tree)
+    assert skel.meta_bytes() < 1024          # paper: skeletons are KBs
+    assert buf.nbytes >= 4_000_000
+
+
+# ------------------------------------------------------------------ partition
+@st.composite
+def layer_sets(draw):
+    L = draw(st.integers(3, 40))
+    sizes = [draw(st.integers(1_000, 5_000_000)) for _ in range(L)]
+    return [LayerInfo(f"l{i}", s, draw(st.integers(1, 12)),
+                      draw(st.integers(10_000, 10**9)))
+            for i, s in enumerate(sizes)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(layer_sets(), st.floats(0.2, 0.8))
+def test_partition_invariants(infos, frac):
+    dm = DelayModel()
+    planner = PartitionPlanner(infos, dm)
+    total = float(np.sum(planner.sizes))
+    budget = max(total * frac, 2 * float(np.max(planner.sizes)) / 0.95 + 1)
+    plan, table = planner.best_partition(budget)
+    # blocks cover every layer exactly once, in order
+    blocks = plan.blocks()
+    assert blocks[0][0] == 0 and blocks[-1][1] == len(infos)
+    for (a, b), (c, d) in zip(blocks, blocks[1:]):
+        assert b == c and a < b
+    # Eq. 3: any two adjacent blocks (m=2 resident) fit the budget
+    s, d, f = create_blocks(plan, planner.sizes, planner.depths, planner.flops)
+    if len(s) > 1:
+        assert max(s[i] + s[i + 1] for i in range(len(s) - 1)) \
+            <= budget * 0.95 + 1e-6
+    # conservation
+    assert abs(float(np.sum(s)) - total) < 1e-6
+    # latency bounds: >= pure execution, <= fully serial
+    t = simulate_pipeline(s, d, f, dm)
+    t_ex = sum(dm.t_ex(x) for x in f)
+    t_serial = sum(dm.t_in(s[i], d[i]) + dm.t_ex(f[i]) + dm.t_out(d[i])
+                   for i in range(len(s)))
+    assert t >= t_ex - 1e-9
+    assert t <= t_serial + 1e-6
+
+
+def test_n_blocks_rule():
+    # paper: n = ceil(m*s/b)
+    assert n_blocks_for_budget(100, 50, m=2) == 4
+    assert n_blocks_for_budget(100, 210, m=2) == 2   # floor at m
+
+
+def test_pipeline_overlap_beats_serial():
+    """Double buffering must hide swap-in latency behind execution."""
+    dm = DelayModel(alpha=1e-9, beta=0, gamma=1e-10, eta=0)
+    s = np.array([1e9, 1e9, 1e9, 1e9])      # 1s swap-in each
+    d = np.zeros(4)
+    f = np.array([2e10] * 4)                 # 2s execution each
+    t = simulate_pipeline(s, d, f, dm, m=2)
+    # serial would be 4*(1+2)=12s; pipelined: 1 + 4*2 = 9s
+    assert t == pytest.approx(9.0, rel=1e-6)
+
+
+# ------------------------------------------------------------------ budget
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(1e6, 1e9), st.floats(0.01, 10.0),
+                          st.floats(0.1, 5.0)), min_size=1, max_size=8),
+       st.floats(1e6, 2e9))
+def test_budget_allocation_eq1(items, available):
+    demands = [ModelDemand(f"m{i}", mem, lat, u)
+               for i, (mem, lat, u) in enumerate(items)]
+    out = allocate_budgets(demands, available)
+    total = sum(d.memory for d in demands)
+    if total <= available:
+        assert out == [d.memory for d in demands]
+    else:
+        assert sum(out) == pytest.approx(available, rel=1e-6)
+        assert all(a > 0 for a in out)
+
+
+def test_budget_ps_calibration():
+    """Higher PS (urgent, slow, small) models get proportionally more than
+    their pure size share (the paper's 1/n reserved calibration)."""
+    a = ModelDemand("fast_big", 1e9, latency=0.1, urgency=1.0)
+    b = ModelDemand("slow_small", 1e8, latency=1.0, urgency=1.0)
+    out = allocate_budgets([a, b], 5e8)
+    share_b = out[1] / 5e8
+    assert share_b > (1e8 / 1.1e9) * 0.5    # strictly above pure-size share
+
+
+# ------------------------------------------------------------------ cost model
+def test_delay_model_fit_recovers_coefficients():
+    true = DelayModel(alpha=2e-9, beta=5e-5, gamma=3e-11, eta=1e-5)
+    rng = np.random.default_rng(0)
+    s_in = [(s, d, true.t_in(s, d) * rng.normal(1, 0.01))
+            for s, d in zip(rng.uniform(1e6, 1e8, 40), rng.integers(1, 50, 40))]
+    s_ex = [(f, true.t_ex(f) * rng.normal(1, 0.01))
+            for f in rng.uniform(1e8, 1e11, 40)]
+    s_out = [(d, true.t_out(d) * rng.normal(1, 0.01))
+             for d in rng.integers(1, 50, 40)]
+    fit = DelayModel.fit(s_in, s_ex, s_out)
+    assert fit.alpha == pytest.approx(true.alpha, rel=0.05)
+    assert fit.beta == pytest.approx(true.beta, rel=0.05)
+    assert fit.gamma == pytest.approx(true.gamma, rel=0.05)
+    assert fit.eta == pytest.approx(true.eta, rel=0.05)
+    assert fit.r2_in(s_in) > 0.99

@@ -1,0 +1,72 @@
+"""Training substrate: optimizer, schedule, loss-decrease integration,
+checkpoint roundtrip."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data.pipeline import SyntheticLM
+from repro.models.transformer import Model
+from repro.training import checkpoint
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+from repro.training.train_loop import TrainState, make_train_step
+
+
+def test_lr_schedule():
+    cfg = OptConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    assert float(lr_at(jnp.asarray(0), cfg)) == 0.0
+    assert float(lr_at(jnp.asarray(10), cfg)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr_at(jnp.asarray(100), cfg)) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_adamw_moves_against_gradient():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.ones((4, 4))}
+    mu, nu = adamw_init(params)
+    p, mu, nu, m = adamw_update(params, grads, mu, nu,
+                                jnp.asarray(200, jnp.int32),
+                                OptConfig(warmup_steps=0))
+    assert float(jnp.mean(p["w"])) < 1.0
+    assert float(m["grad_norm"]) == pytest.approx(4.0, rel=1e-5)
+
+
+def test_train_loss_decreases():
+    """Integration: a few dozen steps on the learnable synthetic stream must
+    cut the loss substantially (the affine pattern is easy)."""
+    cfg = ARCHS["qwen2.5-3b"].reduced()
+    model = Model(cfg)
+    state = TrainState(model.init(jax.random.key(0)))
+    opt = OptConfig(peak_lr=3e-3, warmup_steps=5, total_steps=60)
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    ds = SyntheticLM(cfg, seq_len=64, batch=8, seed=0)
+    losses = []
+    for i, batch in zip(range(60), ds):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
+    assert not any(np.isnan(l) for l in losses)
+
+
+def test_checkpoint_roundtrip():
+    cfg = ARCHS["gemma2-9b"].reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(3))
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, params)
+        like = jax.tree.map(lambda a: jnp.zeros_like(a), params)
+        back = checkpoint.restore(d, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    params = {"w": jnp.ones((4, 4))}
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, params)
+        with pytest.raises(AssertionError):
+            checkpoint.restore(d, {"w": jnp.ones((5, 4))})
