@@ -68,6 +68,7 @@ def _bench_model(kind: str, gpu: bool, budget: float, dm, seed: int) -> Dict:
 
     return {
         "model": kind, "size_mb": total / 1e6, "n_blocks": n_blocks,
+        "overlap_eff": st["overlap_efficiency"],
         "DInf": (m_dinf, t_dinf, 1.0),
         "DCha": (m_cha, t_cha, cosine_fidelity(ref, out_cha)),
         "TPrg": (m_tp, t_tp, cosine_fidelity(ref, out_tp)),
@@ -104,9 +105,15 @@ def run() -> None:
             dinf_m, dinf_t, _ = r["DInf"]
             for meth in ("DInf", "DCha", "TPrg", "SNet"):
                 m, t, fid = r[meth]
+                extra = ""
+                if meth == "SNet":
+                    # (no cache is configured in the scenario arm — hit rate
+                    # would be a misleading constant 0, so it is not emitted;
+                    # bench_overhead's pipeline rows cover the cache)
+                    extra = f";overlap_eff={r['overlap_eff']:.3f}"
                 emit(f"fig11_13.{scen}.{kind}{i}.{meth}",
                      t * 1e6,
                      f"mem_mb={m/1e6:.1f};fidelity={fid:.4f};"
                      f"mem_vs_dinf={100*(1-m/dinf_m):.1f}%;"
                      f"lat_vs_dinf={100*(t/dinf_t-1):+.1f}%;"
-                     f"blocks={r['n_blocks']}")
+                     f"blocks={r['n_blocks']}{extra}")

@@ -1,0 +1,40 @@
+"""Version shims for jax APIs that moved between releases.
+
+The seed targets the `jax.tree.*` convenience namespace, but
+`jax.tree.flatten_with_path` / `jax.tree.unflatten` only exist on newer
+jax releases; older ones (e.g. 0.4.37) expose the same functionality under
+`jax.tree_util`. Import from here instead of feature-testing at call sites.
+"""
+from __future__ import annotations
+
+import jax
+import jax.tree_util as _tu
+
+if hasattr(jax.tree, "flatten_with_path"):
+    tree_flatten_with_path = jax.tree.flatten_with_path
+else:
+    tree_flatten_with_path = _tu.tree_flatten_with_path
+
+if hasattr(jax.tree, "unflatten"):
+    tree_unflatten = jax.tree.unflatten
+else:
+    tree_unflatten = _tu.tree_unflatten
+
+if hasattr(jax.tree, "structure"):
+    tree_structure = jax.tree.structure
+else:
+    tree_structure = _tu.tree_structure
+
+keystr = _tu.keystr
+
+
+def make_mesh(axis_shapes, axis_names):
+    """jax.make_mesh with Auto axis types where the release supports them
+    (jax.sharding.AxisType landed after 0.4.37; older releases only build
+    Auto meshes, so omitting the argument is equivalent)."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         axis_types=(AxisType.Auto,) * len(tuple(axis_names)))

@@ -2,11 +2,15 @@
 delay abstractions, budget allocation, multi-DNN scheduling (paper §3-§6)."""
 from repro.core.budget import ModelDemand, allocate_budgets, performance_score
 from repro.core.cost_model import DelayModel, LayerInfo, layer_flops
+from repro.core.multi_model import MultiModelRuntime
 from repro.core.partition import (BlockPlan, PartitionPlanner, TableRow,
                                   create_blocks, n_blocks_for_budget,
-                                  paper_objective, simulate_pipeline)
-from repro.core.runtime import SwappedModel, Unit, split_units, unit_infos
+                                  paper_objective, plan_peak_bytes,
+                                  simulate_pipeline)
+from repro.core.runtime import (SwappedModel, Unit, split_units, swap_schedule,
+                                unit_infos)
 from repro.core.scheduler import MultiDNNScheduler, ScheduledModel
 from repro.core.skeleton import (Skeleton, assemble, assemble_dummy,
                                  assemble_np, flatten_params)
-from repro.core.swap_engine import LayerStore, SwapEngine
+from repro.core.swap_engine import (BlockCache, LayerStore, MemoryLedger,
+                                    SwapEngine)

@@ -1,0 +1,137 @@
+"""Multi-model swap runtime (paper §6 multi-DNN scheduling, end-to-end).
+
+Several models co-reside under ONE memory budget:
+
+  * a single shared :class:`MemoryLedger` spans every engine — the sum of all
+    models' resident blocks, plus the shared cache, is what must fit ``b``;
+  * a shared LRU :class:`BlockCache` keeps hot units (embeddings, shared
+    blocks, small heads) assembled across requests, so repeat swap-ins of a
+    recently-served model skip the I/O + assembly path entirely;
+  * each model keeps its own depth-m prefetch pipeline; requests interleave
+    at request granularity (one executor — the edge-device model), so the
+    worst-case residency is ``cache + pinned + m blocks of the active model``.
+
+The partition step reserves the cache + pinned bytes off the top and sizes
+every model's blocks against the remainder, so the ledger can never exceed
+the budget no matter how requests interleave.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.cost_model import DelayModel
+from repro.core.partition import BlockPlan
+from repro.core.runtime import SwappedModel
+from repro.core.swap_engine import BlockCache, MemoryLedger
+from repro.models.transformer import Model
+
+
+class MultiModelRuntime:
+    """Owner of the shared ledger + cache and the per-model swapped runtimes.
+
+    Usage::
+
+        rt = MultiModelRuntime(budget=64e6, cache_frac=0.25)
+        rt.add_model("qwen", model_a, params_a, workdir)
+        rt.add_model("gemma", model_b, params_b, workdir)
+        rt.plan(batch=2, seq=32)
+        logits, stats = rt.forward("qwen", batch)       # interleave freely
+    """
+
+    def __init__(self, budget: int, mode: str = "snet",
+                 prefetch_depth: int = 2, cache_frac: float = 0.25,
+                 dm: Optional[DelayModel] = None, delta: float = 0.05):
+        assert 0.0 <= cache_frac < 1.0
+        self.budget = int(budget)
+        self.mode = mode
+        self.prefetch_depth = max(prefetch_depth, 1)
+        self.delta = delta
+        self.dm = dm if dm is not None else DelayModel()
+        self.ledger = MemoryLedger(self.budget)
+        self.cache = BlockCache(int(self.budget * cache_frac), self.ledger)
+        self.models: Dict[str, SwappedModel] = {}
+        self._planned = False
+
+    # ------------------------------------------------------------ registry
+    def add_model(self, name: str, model: Model, params: dict,
+                  workdir: str) -> SwappedModel:
+        assert name not in self.models, f"duplicate model name {name!r}"
+        sm = SwappedModel(model, params, os.path.join(workdir, name),
+                          mode=self.mode, prefetch_depth=self.prefetch_depth,
+                          ledger=self.ledger, cache=self.cache, name=name)
+        self.models[name] = sm
+        self._planned = False
+        return sm
+
+    def _pinned_bytes(self) -> int:
+        """Bytes the engines will pin into the cache regardless of capacity
+        (shared blocks): reserved off the top of every model's block budget."""
+        total = 0
+        for sm in self.models.values():
+            total += sum(sm.store.nbytes(n) for n in sm.engine.pinned
+                         if n in sm.store.skeletons)
+        return total
+
+    def block_budget(self) -> int:
+        """What is left for one model's resident blocks after the shared
+        cache and the pinned units take their cut."""
+        return self.budget - self.cache.capacity - self._pinned_bytes()
+
+    # ------------------------------------------------------------ planning
+    def plan(self, batch: int, seq: int) -> Dict[str, BlockPlan]:
+        """Partition every registered model against the shared budget.
+
+        Call after ALL models are registered: the cache + pinned reserve
+        depends on the full co-resident set."""
+        b = self.block_budget()
+        if b <= 0:
+            raise ValueError(
+                f"budget {self.budget/1e6:.1f} MB leaves no room for blocks "
+                f"after cache {self.cache.capacity/1e6:.1f} MB + pinned "
+                f"{self._pinned_bytes()/1e6:.1f} MB")
+        plans = {}
+        for name, sm in self.models.items():
+            plans[name] = sm.partition(b, self.dm, batch, seq,
+                                       delta=self.delta)
+        self._planned = True
+        return plans
+
+    # ------------------------------------------------------------ serving
+    def forward(self, name: str, batch: dict) -> Tuple[Any, Dict]:
+        assert self._planned, "call plan() after registering all models"
+        return self.models[name].forward(batch)
+
+    def decode(self, name: str, prompt_tokens, max_new_tokens: int = 8,
+               max_len: int = 128) -> Tuple[Any, Dict]:
+        assert self._planned, "call plan() after registering all models"
+        return self.models[name].decode_loop(prompt_tokens, max_new_tokens,
+                                             max_len)
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, Any]:
+        per_model = {}
+        for name, sm in self.models.items():
+            st = sm.engine.stats
+            per_model[name] = {
+                "n_blocks": sm.plan.n_blocks if sm.plan else None,
+                "m": sm.plan.m if sm.plan else None,
+                "overlap_efficiency": st.overlap_efficiency(),
+                "cache_hit_rate": st.cache_hit_rate(),
+                "bytes_swapped_mb": st.bytes_swapped / 1e6,
+            }
+        return {
+            "budget_mb": self.budget / 1e6,
+            "peak_resident_mb": self.ledger.peak / 1e6,
+            "cache_capacity_mb": self.cache.capacity / 1e6,
+            "cache_resident_mb": self.cache.resident_bytes / 1e6,
+            "cache_hit_rate": self.cache.hit_rate(),
+            "cache_hits": self.cache.hits,
+            "cache_misses": self.cache.misses,
+            "models": per_model,
+        }
+
+    def close(self) -> None:
+        for sm in self.models.values():
+            sm.close()
+        self.cache.clear()

@@ -25,8 +25,9 @@ MAX_EXHAUSTIVE = 20_000
 class BlockPlan:
     """A partition scheme p = {p_1..p_{n-1}} over L layers (paper notation:
     p_i are layer indices; block i covers [p_{i-1}, p_i)). ``m`` is the
-    residency the plan was sized for: 2 = double-buffered, 1 = degraded
-    serial (executors must not prefetch)."""
+    residency the plan was sized for: the executor may hold at most m blocks
+    at once — 1 = degraded serial (no prefetch), 2 = the paper's double
+    buffer, m > 2 = deeper prefetch pipelines that absorb swap-in jitter."""
     points: Tuple[int, ...]
     n_layers: int
     m: int = 2
@@ -58,9 +59,11 @@ def create_blocks(plan: BlockPlan, sizes, depths, flops):
 
 
 def simulate_pipeline(s, d, f, dm: DelayModel, m: int = 2) -> float:
-    """Exact makespan of the m=2 double-buffered pipeline: one swap-in channel,
-    one executor; swap-in of block i+1 may start only after block i-1 is
-    swapped out (memory holds at most m blocks)."""
+    """Exact makespan of the depth-m prefetch pipeline: one swap-in channel,
+    one executor; swap-in of block i may start only once block i-m has been
+    swapped out (memory holds at most m blocks). m=2 is the paper's double
+    buffer; m=1 is strictly serial; m>2 prefetches deeper."""
+    assert m >= 1
     n = len(s)
     t_in = [dm.t_in(s[i], d[i]) for i in range(n)]
     t_ex = [dm.t_ex(f[i]) for i in range(n)]
@@ -70,10 +73,8 @@ def simulate_pipeline(s, d, f, dm: DelayModel, m: int = 2) -> float:
     freed = [0.0] * n
     for i in range(n):
         start = load_done[i - 1] if i else 0.0
-        if m == 2 and i >= 2:
-            start = max(start, freed[i - 2])
-        elif m == 1 and i >= 1:
-            start = max(start, freed[i - 1])
+        if i >= m:
+            start = max(start, freed[i - m])
         load_done[i] = start + t_in[i]
         exec_start = max(load_done[i], exec_done[i - 1] if i else 0.0)
         exec_done[i] = exec_start + t_ex[i]
@@ -102,8 +103,17 @@ def n_blocks_for_budget(total_size: float, budget: float, m: int = 2) -> int:
 @dataclass
 class TableRow:
     points: Tuple[int, ...]
-    max_memory: float        # peak bytes with m=2 (max adjacent pair)
+    max_memory: float        # peak bytes with m resident (max m-block window)
     latency: Optional[float]  # None -> "exceed"
+
+
+def plan_peak_bytes(sizes: np.ndarray, m: int) -> float:
+    """Peak weight residency of a block-size vector under depth-m residency:
+    the largest sum over any window of min(m, n) consecutive blocks."""
+    n = len(sizes)
+    w = min(max(m, 1), n)
+    csum = np.concatenate([[0.0], np.cumsum(sizes)])
+    return float(np.max(csum[w:] - csum[:-w]))
 
 
 class PartitionPlanner:
@@ -190,11 +200,7 @@ class PartitionPlanner:
                 plan = BlockPlan(pts, self.L)
                 s, d, f = create_blocks(plan, self.sizes, self.depths,
                                         self.flops)
-                if m == 2 and len(s) > 1:
-                    peak = float(max(s[i] + s[i + 1]
-                                     for i in range(len(s) - 1)))
-                else:
-                    peak = float(max(s))
+                peak = plan_peak_bytes(s, m)
                 rows.append((pts, peak,
                              simulate_pipeline(s, d, f, self.dm, m)))
             self._rows_cache[key] = rows
@@ -227,11 +233,13 @@ class PartitionPlanner:
                        allow_degrade: bool = True) -> Tuple[BlockPlan, List[TableRow]]:
         """Pick n via the paper's rule, then the feasible row with least
         latency; if no candidate fits, increase n (smaller blocks). If even
-        single-layer blocks cannot satisfy Eq. 3 with m=2 (two adjacent blocks
-        resident), degrade to m=1 — sequential swapping with no overlap —
-        before giving up (a below-paper-minimum budget)."""
+        single-layer blocks cannot satisfy Eq. 3 at the planner's residency m
+        (m consecutive blocks resident), progressively shallow the pipeline
+        down to m=1 — sequential swapping with no overlap — before giving up
+        (a below-paper-minimum budget)."""
         total = float(np.sum(self.sizes))
-        for m in ((self.m, 1) if allow_degrade and self.m == 2 else (self.m,)):
+        depths = tuple(range(self.m, 0, -1)) if allow_degrade else (self.m,)
+        for m in depths:
             n0 = min(max(n_blocks_for_budget(total, budget, m), 1), self.L)
             for n in range(n0, min(n0 + max_extra_blocks, self.L) + 1):
                 table = self.lookup_table(n, budget, delta, m=m)

@@ -2,26 +2,71 @@
 
 Splits a model into swappable units (embedding, each layer, head), stores
 them via LayerStore, and executes a forward pass block-by-block under a
-memory budget with the m=2 double-buffered pipeline. Bit-identical to the
+memory budget with a depth-m prefetch pipeline (m=2 is the paper's double
+buffer; deeper pipelines absorb swap-in jitter). Bit-identical to the
 in-memory model (lossless — the paper's headline property).
+
+Engines may share a MemoryLedger and BlockCache with other models — the
+multi-DNN serving path (core/multi_model.py) relies on this to keep several
+co-resident models under ONE budget while hot units stay cached.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core.cost_model import DelayModel, LayerInfo, layer_flops
 from repro.core.partition import BlockPlan, PartitionPlanner
-from repro.core.swap_engine import LayerStore, SwapEngine
+from repro.core.swap_engine import (BlockCache, LayerStore, MemoryLedger,
+                                    SwapEngine)
 from repro.models.layers import rms_norm, softcap
 from repro.models.transformer import Model, apply_layer
+
+
+def swap_schedule(eng: SwapEngine, blocks, unit_names: Sequence[str], m: int):
+    """Drive the depth-m prefetch pipeline over ``blocks``.
+
+    Yields (block_index, lo, hi, handle) with the handle's block resident;
+    swap-out happens after the caller's body returns control. Issues the load
+    of block i only once block i-m has been freed, so at most m blocks are
+    ever resident — the executor-side mirror of partition.simulate_pipeline.
+    """
+    m = max(m, 1)
+    futs: deque = deque()
+    issued = 0
+
+    def pump(limit: int) -> None:
+        nonlocal issued
+        while issued < min(limit, len(blocks)):
+            lo, hi = blocks[issued]
+            futs.append(eng.prefetch(list(unit_names[lo:hi])))
+            issued += 1
+
+    pump(m)
+    try:
+        for bi, (lo, hi) in enumerate(blocks):
+            handle = eng.wait(futs.popleft())
+            try:
+                yield bi, lo, hi, handle
+            finally:
+                eng.swap_out(handle)
+            pump(bi + 1 + m)
+    finally:
+        # Abandoned mid-run (body raised, wait raised, or caller closed the
+        # generator): drain in-flight prefetches so their ledger bytes and
+        # cache leases are released — a shared ledger must not keep charging
+        # a failed request's blocks against every other tenant's budget.
+        while futs:
+            try:
+                eng.swap_out(futs.popleft().result())
+            except Exception:
+                continue
 
 
 @dataclass
@@ -86,13 +131,17 @@ class SwappedSequential:
 
     def __init__(self, named_units, apply_fn, workdir: str,
                  mode: str = "snet", budget: Optional[int] = None,
-                 gpu_dispatch: bool = False):
+                 gpu_dispatch: bool = False, prefetch_depth: int = 2,
+                 ledger: Optional[MemoryLedger] = None,
+                 cache: Optional[BlockCache] = None):
         """named_units: [(name, params)]; apply_fn(i, params, x) -> x."""
         self.named_units = list(named_units)
         self.apply_fn = apply_fn
+        self.prefetch_depth = max(prefetch_depth, 1)
         self.store = LayerStore.build(self.named_units, workdir)
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
-                                 gpu_dispatch=gpu_dispatch)
+                                 gpu_dispatch=gpu_dispatch,
+                                 ledger=ledger, cache=cache)
         self.plan: Optional[BlockPlan] = None
         self._block_fns: Dict[Tuple[int, int], Any] = {}
 
@@ -111,43 +160,34 @@ class SwappedSequential:
 
     def partition_with(self, infos, budget: int, dm: DelayModel,
                        delta: float = 0.05) -> BlockPlan:
-        planner = PartitionPlanner(infos, dm)
+        planner = PartitionPlanner(infos, dm, m=self.prefetch_depth)
         self.plan, self.table = planner.best_partition(budget, delta)
         self.planner = planner
         return self.plan
 
     def set_plan(self, points) -> None:
-        self.plan = BlockPlan(tuple(points), len(self.named_units))
+        self.plan = BlockPlan(tuple(points), len(self.named_units),
+                              m=self.prefetch_depth)
 
     def forward(self, x) -> Tuple[Any, Dict]:
         assert self.plan is not None
         eng = self.engine
-        blocks = self.plan.blocks()
-        overlap = self.plan.m >= 2       # m=1 plans must run strictly serial
+        names = [n for n, _ in self.named_units]
         t_start = time.perf_counter()
-        fut = eng.prefetch([self.named_units[i][0]
-                            for i in range(blocks[0][0], blocks[0][1])])
-        for bi, (lo, hi) in enumerate(blocks):
-            handle = fut.result()
-            if overlap and bi + 1 < len(blocks):
-                nlo, nhi = blocks[bi + 1]
-                fut = eng.prefetch([self.named_units[i][0]
-                                    for i in range(nlo, nhi)])
+        for bi, lo, hi, handle in swap_schedule(eng, self.plan.blocks(),
+                                                names, self.plan.m):
             t0 = time.perf_counter()
             x = self._block_fn(lo, hi)(handle.params, x)
             x = jax.block_until_ready(x)
             eng.record_exec(time.perf_counter() - t0)
-            eng.swap_out(handle)
-            if not overlap and bi + 1 < len(blocks):
-                nlo, nhi = blocks[bi + 1]       # serial: load AFTER freeing
-                fut = eng.prefetch([self.named_units[i][0]
-                                    for i in range(nlo, nhi)])
         total = time.perf_counter() - t_start
         st = eng.stats
         return x, {"latency_s": total,
                    "peak_resident_mb": st.peak_resident / 1e6,
                    "t_in": list(st.t_in), "t_ex": list(st.t_ex),
-                   "t_out": list(st.t_out)}
+                   "t_out": list(st.t_out),
+                   "overlap_efficiency": st.overlap_efficiency(),
+                   "cache_hit_rate": st.cache_hit_rate()}
 
     def close(self):
         self.engine.close()
@@ -158,10 +198,18 @@ class SwappedModel:
 
     def __init__(self, model: Model, params: dict, workdir: str,
                  mode: str = "snet", budget: Optional[int] = None,
-                 gpu_dispatch: bool = False):
+                 gpu_dispatch: bool = False, prefetch_depth: int = 2,
+                 ledger: Optional[MemoryLedger] = None,
+                 cache: Optional[BlockCache] = None,
+                 name: Optional[str] = None):
         self.model = model
         self.cfg = model.cfg
+        self.name = name or model.cfg.name
+        self.prefetch_depth = max(prefetch_depth, 1)
         self.units = split_units(model, params)
+        prefix = f"{name}/" if name else ""
+        for u in self.units:            # namespace units per model so a
+            u.name = prefix + u.name    # shared cache/store never collides
         pinned = tuple({u.name for u in self.units if u.kind == "shared_attn"})
         # de-dup shared units in the store
         seen, store_units = set(), []
@@ -172,7 +220,8 @@ class SwappedModel:
             store_units.append((u.name, u.params))
         self.store = LayerStore.build(store_units, workdir)
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
-                                 gpu_dispatch=gpu_dispatch, pinned=pinned)
+                                 gpu_dispatch=gpu_dispatch, pinned=pinned,
+                                 ledger=ledger, cache=cache)
         self.plan: Optional[BlockPlan] = None
         self._jitted: Dict[str, Any] = {}
 
@@ -180,13 +229,14 @@ class SwappedModel:
     def partition(self, budget: int, dm: DelayModel, batch: int, seq: int,
                   delta: float = 0.05) -> BlockPlan:
         infos = unit_infos(self.model, self.units, batch, seq)
-        planner = PartitionPlanner(infos, dm)
+        planner = PartitionPlanner(infos, dm, m=self.prefetch_depth)
         self.plan, self.table = planner.best_partition(budget, delta)
         self.planner = planner
         return self.plan
 
     def set_plan(self, points: Tuple[int, ...]) -> None:
-        self.plan = BlockPlan(tuple(points), len(self.units))
+        self.plan = BlockPlan(tuple(points), len(self.units),
+                              m=self.prefetch_depth)
 
     # ------------------------------------------------------------ apply fns
     def _apply_unit(self, unit: Unit, uparams: dict, x, positions, batch):
@@ -254,6 +304,8 @@ class SwappedModel:
         caches = {i: self._unit_cache_struct(u, B, max_len)
                   for i, u in enumerate(self.units) if u.layer_id is not None}
 
+        unit_names = [u.name for u in self.units]
+
         def run_tokens(tokens, pos0):
             """Teacher-forced pass, one token at a time, swapped."""
             eng = self.engine
@@ -265,14 +317,10 @@ class SwappedModel:
                 batch = {"token": tok, "pos": pos}
                 if cfg.rope_type == "mrope":
                     batch["positions"] = jnp.full((B, 1, 3), pos0 + t, jnp.int32)
-                fut = eng.prefetch([u.name for u in
-                                    self.units[blocks[0][0]:blocks[0][1]]])
                 x = positions = None
-                for bi, (lo, hi) in enumerate(blocks):
-                    handle = fut.result()
-                    if bi + 1 < len(blocks):
-                        nlo, nhi = blocks[bi + 1]
-                        fut = eng.prefetch([u.name for u in self.units[nlo:nhi]])
+                for bi, lo, hi, handle in swap_schedule(eng, blocks,
+                                                        unit_names,
+                                                        self.plan.m):
                     for ui, p in zip(range(lo, hi), handle.params):
                         unit = self.units[ui]
                         if unit.kind == "embed":
@@ -294,7 +342,6 @@ class SwappedModel:
                                 cfg, kind, pc, x, positions,
                                 cfg.is_local_layer(unit.layer_id),
                                 caches[ui], pos, "decode")
-                    eng.swap_out(handle)
             return last_logits
 
         t0 = time.time()
@@ -315,27 +362,18 @@ class SwappedModel:
     def forward(self, batch: dict) -> Tuple[jax.Array, Dict]:
         """Swapped forward pass. Returns (last-position logits, stats)."""
         assert self.plan is not None, "call partition()/set_plan() first"
-        blocks = self.plan.blocks()
-        overlap = self.plan.m >= 2
         eng = self.engine
+        names = [u.name for u in self.units]
         x, positions = None, None
 
         t_start = time.perf_counter()
-        fut = eng.prefetch([u.name for u in self.units[blocks[0][0]:blocks[0][1]]])
-        for bi, (lo, hi) in enumerate(blocks):
-            handle = fut.result()
-            if overlap and bi + 1 < len(blocks):
-                nlo, nhi = blocks[bi + 1]
-                fut = eng.prefetch([u.name for u in self.units[nlo:nhi]])
+        for bi, lo, hi, handle in swap_schedule(eng, self.plan.blocks(),
+                                                names, self.plan.m):
             t0 = time.perf_counter()
             for u, p in zip(self.units[lo:hi], handle.params):
                 x, positions = self._apply_unit(u, p, x, positions, batch)
             x = jax.block_until_ready(x)
             eng.record_exec(time.perf_counter() - t0)
-            eng.swap_out(handle)
-            if not overlap and bi + 1 < len(blocks):
-                nlo, nhi = blocks[bi + 1]       # serial: load AFTER freeing
-                fut = eng.prefetch([u.name for u in self.units[nlo:nhi]])
         total = time.perf_counter() - t_start
         if x.ndim == 3 and x.shape[-1] == self.cfg.vocab_size:
             logits = x[:, -1:]
@@ -347,6 +385,8 @@ class SwappedModel:
             "t_in": list(st.t_in), "t_ex": list(st.t_ex), "t_out": list(st.t_out),
             "peak_resident_mb": st.peak_resident / 1e6,
             "meta_mb": self.store.meta_bytes() / 1e6,
+            "overlap_efficiency": st.overlap_efficiency(),
+            "cache_hit_rate": st.cache_hit_rate(),
         }
 
     def close(self):

@@ -43,19 +43,22 @@ class ScheduledModel:
 
 class MultiDNNScheduler:
     """Paper §6.2: allocate budgets across DNNs, partition each, adapt on
-    budget changes. Each model runs independently (its own swap engine), the
-    m=2 block pipeline overlaps swap-in with execution."""
+    budget changes. Each model runs its own depth-m prefetch pipeline to
+    overlap swap-in with execution; when the models share one runtime
+    (core/multi_model.py) ``reserved`` carves the shared block cache +
+    pinned units out of the available memory before Eq. 1 splits the rest."""
 
     def __init__(self, models: Sequence[ScheduledModel], available: float,
-                 delta: float = 0.05):
+                 delta: float = 0.05, reserved: float = 0.0):
         self.models = list(models)
         self.available = available
+        self.reserved = reserved
         self.delta = delta
         self.replan()
 
     def replan(self) -> None:
         budgets = allocate_budgets([m.demand() for m in self.models],
-                                   self.available)
+                                   self.available - self.reserved)
         # Eq. 1 is share-based and can dip below a model's physical floor
         # (its largest layer). Lift those to their floor and take the lift
         # from the models with the most headroom.
@@ -66,8 +69,10 @@ class MultiDNNScheduler:
             headroom = [max(b - f, 0.0) for f, b in zip(floors, budgets)]
             hr_total = sum(headroom)
             if hr_total < deficit:
+                usable = self.available - self.reserved
                 raise ValueError(
-                    f"available memory {self.available/1e6:.1f} MB below the "
+                    f"available memory {usable/1e6:.1f} MB (after "
+                    f"{self.reserved/1e6:.1f} MB reserved) below the "
                     f"sum of per-model floors {sum(floors)/1e6:.1f} MB")
             budgets = [max(b, f) - (max(b - f, 0.0) / hr_total) * deficit
                        for f, b in zip(floors, budgets)]

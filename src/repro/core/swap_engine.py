@@ -13,15 +13,26 @@ Modes (the full system + the paper's ablation arms, Fig. 15):
                   instantiate a dummy block and copy parameters in
                   (per-tensor copies, 2x resident during assembly).
 
-The engine tracks wall-clock (t_in split into I/O + assembly, t_out) and a
-logical resident-bytes ledger (peak is what the paper's Figs. 11-13 report).
-Double-buffered prefetch (m=2) runs on a single loader thread.
+The engine tracks wall-clock (t_in split into I/O + assembly, t_out, and the
+stall time the executor spends waiting on prefetch futures — the visible part
+of t_in) against a resident-bytes ledger (peak is what the paper's Figs. 11-13
+report). The ledger may be PRIVATE (one model, the seed behaviour) or SHARED
+across several engines (the §6.2 multi-DNN scenario: co-resident models under
+one budget). Prefetch runs on a single loader thread — one swap-in channel,
+matching the paper's pipeline model — at any queue depth m >= 1.
+
+An optional LRU BlockCache keeps hot units (embeddings, shared blocks, small
+heads) resident across requests so repeat swap-ins skip the I/O + assembly
+path entirely; cached bytes are charged to the shared ledger exactly once,
+no matter how many engines or handles reference them.
 """
 from __future__ import annotations
 
 import gc
 import os
+import threading
 import time
+from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -72,6 +83,161 @@ class LayerStore:
         return sum(s.meta_bytes() for s in self.skeletons.values())
 
 
+# ------------------------------------------------------------------ ledger
+class MemoryLedger:
+    """Resident-bytes accounting, optionally shared by several SwapEngines.
+
+    One ledger == one memory budget: when co-resident models each hold blocks
+    (plus the shared block cache), the SUM of their bytes is what must stay
+    under budget — per-engine ledgers cannot see each other's residency.
+    Thread-safe: loader threads add while executor threads drop."""
+
+    def __init__(self, budget: Optional[int] = None):
+        self.budget = budget
+        self._entries: Dict[object, int] = {}
+        self._lock = threading.Lock()
+        self.peak = 0
+
+    @property
+    def resident(self) -> int:
+        with self._lock:
+            return sum(self._entries.values())
+
+    def add(self, key: object, nbytes: int, what: str = "block") -> int:
+        """Charge ``nbytes``; returns the post-add resident total. Over
+        budget: the entry is ROLLED BACK before raising, so one rejected
+        request cannot permanently inflate a ledger other tenants share."""
+        with self._lock:
+            self._entries[key] = nbytes
+            total = sum(self._entries.values())
+            if self.budget is not None and total > self.budget:
+                del self._entries[key]
+            else:
+                self.peak = max(self.peak, total)
+                return total
+        # The paper treats this as a scheduling bug: blocks must fit b.
+        raise MemoryError(
+            f"resident {total/1e6:.1f} MB exceeds budget "
+            f"{self.budget/1e6:.1f} MB (while adding {what})")
+
+    def drop(self, key: object) -> None:
+        with self._lock:
+            self._entries.pop(key, None)
+
+
+# ------------------------------------------------------------------ cache
+class BlockCache:
+    """LRU cache of assembled units, shared across engines and requests.
+
+    Entries are charged to the ledger once under a per-name key — a unit
+    shared by two models (or referenced by several in-flight handles) never
+    double-counts. Entries pinned via :meth:`pin` are never evicted (the
+    seed's ``pinned=`` behaviour); other entries are evicted LRU-first once
+    ``capacity`` bytes are exceeded, but only when no handle still references
+    them (refcounted, so the ledger never loses sight of live bytes).
+
+    Admission is thresholded: only units no larger than ``admit_frac`` of
+    capacity enter. A block traversal is a cyclic scan — admit-everything LRU
+    would evict each unit just before its next use and hit 0% — whereas the
+    small hot units the paper calls out (embeddings, shared blocks, small
+    heads) co-reside comfortably and hit on every repeat request."""
+
+    def __init__(self, capacity: int, ledger: MemoryLedger,
+                 admit_frac: float = 0.25):
+        self.capacity = capacity
+        self.admit_frac = admit_frac
+        self.ledger = ledger
+        self._lock = threading.RLock()
+        # name -> [params, ledger_bytes, refcount]
+        self._entries: "OrderedDict[str, list]" = OrderedDict()
+        self._pinned: set = set()
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------ policy
+    def pin(self, names: Sequence[str]) -> None:
+        with self._lock:
+            self._pinned.update(names)
+
+    @property
+    def pinned(self) -> frozenset:
+        with self._lock:
+            return frozenset(self._pinned)
+
+    def admits(self, name: str, nbytes: int) -> bool:
+        """Pinned units always enter; others only if small enough to be a
+        plausible hot unit (see class docstring)."""
+        with self._lock:
+            if name in self._pinned:
+                return True
+            return 0 < nbytes <= self.capacity * self.admit_frac
+
+    # ------------------------------------------------------------ lookup
+    def acquire(self, name: str, count: bool = True):
+        """Return cached params (bumping LRU + refcount) or None."""
+        with self._lock:
+            e = self._entries.get(name)
+            if e is None:
+                if count:
+                    self.misses += 1
+                return None
+            self._entries.move_to_end(name)
+            e[2] += 1
+            if count:
+                self.hits += 1
+            return e[0]
+
+    def release(self, name: str) -> None:
+        with self._lock:
+            e = self._entries.get(name)
+            if e is not None:
+                e[2] = max(e[2] - 1, 0)
+
+    def put(self, name: str, params, ledger_bytes: int) -> None:
+        """Insert (idempotent) and evict LRU unpinned idle entries to fit."""
+        with self._lock:
+            if name in self._entries:
+                return
+            # charge first: if the ledger rejects (budget), nothing inserted
+            self.ledger.add(("cache", name), ledger_bytes, f"cache:{name}")
+            self._entries[name] = [params, ledger_bytes, 0]
+            self._evict_to_capacity()
+
+    def _evict_to_capacity(self) -> None:
+        over = self._unpinned_bytes() - self.capacity
+        if over <= 0:
+            return
+        for name in list(self._entries):
+            if over <= 0:
+                break
+            e = self._entries[name]
+            if name in self._pinned or e[2] > 0:
+                continue
+            over -= e[1]
+            del self._entries[name]
+            self.ledger.drop(("cache", name))
+
+    def _unpinned_bytes(self) -> int:
+        return sum(e[1] for n, e in self._entries.items()
+                   if n not in self._pinned)
+
+    # ------------------------------------------------------------ stats
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return sum(e[1] for e in self._entries.values())
+
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def clear(self) -> None:
+        with self._lock:
+            for name in list(self._entries):
+                self.ledger.drop(("cache", name))
+            self._entries.clear()
+
+
 # ------------------------------------------------------------------ handles
 @dataclass
 class BlockHandle:
@@ -81,6 +247,7 @@ class BlockHandle:
     resident_bytes: int          # ledger bytes incl. mode-induced extra copies
     io_s: float = 0.0
     asm_s: float = 0.0
+    cached_names: List[str] = field(default_factory=list)
 
 
 @dataclass
@@ -90,43 +257,74 @@ class SwapStats:
     t_in_asm: List[float] = field(default_factory=list)
     t_ex: List[float] = field(default_factory=list)
     t_out: List[float] = field(default_factory=list)
+    t_wait: List[float] = field(default_factory=list)   # executor stalls
     peak_resident: int = 0
     bytes_swapped: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    def overlap_efficiency(self) -> float:
+        """Fraction of total swap-in time hidden behind execution: 1.0 means
+        the executor never stalled on a prefetch (paper Fig. 10's ideal);
+        0.0 means every swap-in was fully visible (serial)."""
+        total_in = sum(self.t_in)
+        if total_in <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - sum(self.t_wait) / total_in)
+
+    def cache_hit_rate(self) -> float:
+        n = self.cache_hits + self.cache_misses
+        return self.cache_hits / n if n else 0.0
 
 
 class SwapEngine:
+    """One model's swap-in/swap-out executor.
+
+    ``ledger`` and ``cache`` may be shared with other engines (multi-model
+    serving under one budget); by default each engine gets a private ledger
+    seeded from ``budget`` and a pin-only cache (capacity 0: only ``pinned``
+    units are retained, the seed behaviour)."""
+
     def __init__(self, store: LayerStore, mode: str = "snet",
                  budget: Optional[int] = None, gpu_dispatch: bool = False,
-                 pinned: Sequence[str] = ()):
+                 pinned: Sequence[str] = (),
+                 ledger: Optional[MemoryLedger] = None,
+                 cache: Optional[BlockCache] = None):
         assert mode in ("snet", "copy_in", "dummy_asm")
         self.store = store
         self.mode = mode
-        self.budget = budget
         self.gpu_dispatch = gpu_dispatch
-        self.pinned = set(pinned)
-        self._resident: Dict[int, int] = {}
-        self._pinned_handles: Dict[str, BlockHandle] = {}
+        self.ledger = ledger if ledger is not None else MemoryLedger(budget)
+        self.cache = cache if cache is not None else BlockCache(0, self.ledger)
+        self.cache.pin(pinned)
         self.stats = SwapStats()
         self._loader = ThreadPoolExecutor(max_workers=1,
                                           thread_name_prefix="swapnet-loader")
 
     # -------------------------------------------------------------- ledger
     @property
+    def pinned(self) -> frozenset:
+        """The cache is the single source of truth for pinned-ness (a shared
+        cache may pin units for several engines; callers filter by store)."""
+        return self.cache.pinned
+
+    @property
+    def budget(self) -> Optional[int]:
+        return self.ledger.budget
+
+    @property
     def resident_bytes(self) -> int:
-        return sum(self._resident.values())
+        return self.ledger.resident
 
     def _ledger_add(self, handle: BlockHandle) -> None:
-        self._resident[id(handle)] = handle.resident_bytes
-        self.stats.peak_resident = max(self.stats.peak_resident,
-                                       self.resident_bytes)
-        if self.budget is not None and self.resident_bytes > self.budget:
-            # The paper treats this as a scheduling bug: blocks must fit b.
-            raise MemoryError(
-                f"resident {self.resident_bytes/1e6:.1f} MB exceeds budget "
-                f"{self.budget/1e6:.1f} MB (mode={self.mode})")
-
-    def _ledger_drop(self, handle: BlockHandle) -> None:
-        self._resident.pop(id(handle), None)
+        total = self.ledger.add(id(handle), handle.resident_bytes,
+                                f"block[{','.join(handle.names[:3])}...]"
+                                if len(handle.names) > 3
+                                else f"block[{','.join(handle.names)}]")
+        # per-engine peak = residency observed while THIS engine was adding;
+        # resettable via stats.__init__() (the ledger's .peak is the
+        # monotone lifetime number the multi-model stats report).
+        self.stats.peak_resident = max(self.stats.peak_resident, total)
 
     # -------------------------------------------------------------- swap-in
     def _load_unit(self, name: str) -> Tuple[dict, int, float, float]:
@@ -169,44 +367,75 @@ class SwapEngine:
         return dev, extra, t1 - t0, t2 - t1
 
     def swap_in(self, names: Sequence[str]) -> BlockHandle:
-        params, total, ledger, io_s, asm_s = [], 0, 0, 0.0, 0.0
-        for name in names:
-            if name in self.pinned and name in self._pinned_handles:
-                params.append(self._pinned_handles[name].params[0])
-                continue
-            p, extra, io, asm = self._load_unit(name)
-            n = self.store.nbytes(name)
-            params.append(p)
-            total += n
-            ledger += extra
-            io_s += io
-            asm_s += asm
-            if name in self.pinned:
-                h = BlockHandle([name], [p], n, extra, io, asm)
-                self._pinned_handles[name] = h
-                self._ledger_add(h)
-                ledger -= extra
-                total -= n
-        handle = BlockHandle(list(names), params, total, ledger, io_s, asm_s)
-        self._ledger_add(handle)
+        params: List[dict] = []
+        cached: List[str] = []
+        total, ledger, loaded, io_s, asm_s = 0, 0, 0, 0.0, 0.0
+        try:
+            for name in names:
+                hit = self.cache.acquire(name)
+                if hit is not None:
+                    params.append(hit)
+                    cached.append(name)
+                    self.stats.cache_hits += 1
+                    continue
+                p, extra, io, asm = self._load_unit(name)
+                n = self.store.nbytes(name)
+                params.append(p)
+                io_s += io
+                asm_s += asm
+                loaded += n
+                self.stats.cache_misses += 1
+                if n and self.cache.admits(name, n):
+                    # hot unit: retained across requests, charged to the
+                    # ledger once under the cache's key — not this handle's.
+                    self.cache.put(name, p, extra)
+                    if self.cache.acquire(name, count=False) is not None:
+                        cached.append(name)
+                    else:           # raced out by eviction: charge the handle
+                        total += n
+                        ledger += extra
+                else:
+                    total += n
+                    ledger += extra
+            handle = BlockHandle(list(names), params, total, ledger,
+                                 io_s, asm_s, cached_names=cached)
+            self._ledger_add(handle)
+        except BaseException:
+            # failed partway (I/O error, ledger rejection): no handle will
+            # ever be swapped out, so drop the cache leases taken above —
+            # a leaked refcount would make those entries unevictable forever.
+            for name in cached:
+                self.cache.release(name)
+            raise
         self.stats.t_in.append(io_s + asm_s)
         self.stats.t_in_io.append(io_s)
         self.stats.t_in_asm.append(asm_s)
-        self.stats.bytes_swapped += total
-        return handle
+        self.stats.bytes_swapped += loaded   # actual I/O traffic: cache hits
+        return handle                        # skip it, admitted loads count
 
     def prefetch(self, names: Sequence[str]) -> Future:
-        """Double buffering: loader thread fetches the next block while the
-        executor runs the current one (paper Fig. 10)."""
+        """Pipelined prefetch: the loader thread fetches upcoming blocks while
+        the executor runs the current one (paper Fig. 10). A single loader
+        thread = one swap-in channel; queue depth is the caller's m-1."""
         return self._loader.submit(self.swap_in, list(names))
+
+    def wait(self, fut: Future) -> BlockHandle:
+        """Block on a prefetch future, recording the stall as visible t_in."""
+        t0 = time.perf_counter()
+        handle = fut.result()
+        self.stats.t_wait.append(time.perf_counter() - t0)
+        return handle
 
     # -------------------------------------------------------------- swap-out
     def swap_out(self, handle: BlockHandle) -> float:
         """Write-back-free: parameters are immutable — drop references, GC.
-        Returns t_out."""
+        Cache-resident units merely drop their lease. Returns t_out."""
         t0 = time.perf_counter()
         handle.params = []
-        self._ledger_drop(handle)
+        for name in handle.cached_names:
+            self.cache.release(name)
+        handle.cached_names = []
+        self.ledger.drop(id(handle))
         gc.collect(0)
         dt = time.perf_counter() - t0
         self.stats.t_out.append(dt)

@@ -10,7 +10,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) = 512 chips ("pod", "data", "model") — the pod
     axis is pure data parallelism across pods."""
     import jax
-    from jax.sharding import AxisType
+
+    from repro.compat import make_mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
@@ -20,13 +21,10 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}, have {len(devs)} — the "
             f"dry-run must set --xla_force_host_platform_device_count=512 "
             f"before any jax import")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_smoke_mesh():
     """1-device mesh with the production axis names (CI smoke tests)."""
-    import jax
-    from jax.sharding import AxisType
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    from repro.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))

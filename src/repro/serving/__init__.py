@@ -1,1 +1,2 @@
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import (MultiModelServingEngine, Request,
+                                  ServingEngine, pad_prompts)

@@ -1,21 +1,26 @@
-"""Batched serving engine: request queue -> padded batch -> prefill -> greedy
-decode. Supports an HBM weight budget via SwapNet weight-block streaming
-(the paper's §10 LLM-on-edge direction): when ``weight_budget`` is set, the
-dense forward of each decode step streams layer blocks through memory with
-the m=2 pipeline instead of keeping all weights resident.
+"""Batched serving engines.
+
+:class:`ServingEngine` — single in-memory model: request queue -> padded
+batch -> prefill -> greedy decode.
+
+:class:`MultiModelServingEngine` — multi-tenant serving on top of
+:class:`~repro.core.multi_model.MultiModelRuntime` (the paper's §6 multi-DNN
+scenario end-to-end): several models co-reside under ONE weight budget,
+requests for different models interleave freely, blocks stream through
+memory with each model's depth-m prefetch pipeline, and hot units are served
+out of the shared LRU block cache.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models.transformer import Model, alloc_cache
+from repro.models.transformer import Model
 from repro.serving.kv_cache import pad_prefill_cache
 
 
@@ -28,6 +33,20 @@ class Request:
     output: List[int] = field(default_factory=list)
 
 
+def pad_prompts(cfg, reqs: Sequence["Request"]) -> Dict:
+    """Left-pad a request batch into a prefill input dict."""
+    B = len(reqs)
+    L = max(len(r.prompt) for r in reqs)
+    toks = np.zeros((B, L), np.int32)
+    for i, r in enumerate(reqs):
+        toks[i, L - len(r.prompt):] = r.prompt
+    batch = {"tokens": jnp.asarray(toks)}
+    if cfg.rope_type == "mrope":
+        pos = np.broadcast_to(np.arange(L)[None, :, None], (B, L, 3))
+        batch["positions"] = jnp.asarray(pos.copy(), jnp.int32)
+    return batch
+
+
 class ServingEngine:
     def __init__(self, model: Model, params: dict, max_len: int = 512):
         self.model = model
@@ -37,16 +56,7 @@ class ServingEngine:
         self._step = jax.jit(model.decode_step)
 
     def _pad_batch(self, reqs: Sequence[Request]) -> Dict:
-        B = len(reqs)
-        L = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((B, L), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, L - len(r.prompt):] = r.prompt     # left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.model.cfg.rope_type == "mrope":
-            pos = np.broadcast_to(np.arange(L)[None, :, None], (B, L, 3))
-            batch["positions"] = jnp.asarray(pos.copy(), jnp.int32)
-        return batch
+        return pad_prompts(self.model.cfg, reqs)
 
     def generate(self, reqs: Sequence[Request]) -> Dict[str, float]:
         """Greedy generation for a batch of requests (in place)."""
@@ -84,3 +94,43 @@ class ServingEngine:
         return {"prefill_s": t_prefill, "total_s": total,
                 "decode_steps": n_steps,
                 "tok_per_s": (n_steps * B) / max(total - t_prefill, 1e-9)}
+
+
+class MultiModelServingEngine:
+    """Interleaved multi-tenant serving under one shared weight budget.
+
+    Wraps a planned :class:`~repro.core.multi_model.MultiModelRuntime`:
+    requests are tagged with the model they target and served in arrival
+    order, one at a time (the single-executor edge-device model). Every
+    forward streams the target model's blocks through the shared ledger;
+    hot units (embeddings, heads, shared blocks) of recently-served models
+    stay in the shared cache, so alternating tenants pay the swap-in cost
+    only for the cold middle of each model.
+    """
+
+    def __init__(self, runtime):
+        self.runtime = runtime
+
+    def prefill(self, name: str, reqs: Sequence[Request]) -> jax.Array:
+        """Swapped prefill of a same-model request batch; returns the
+        last-position logits (bit-identical to the unswapped model)."""
+        sm = self.runtime.models[name]
+        batch = pad_prompts(sm.model.cfg, reqs)
+        logits, _ = self.runtime.forward(name, batch)
+        return logits
+
+    def generate(self, tagged_reqs: Sequence[Tuple[str, Request]],
+                 max_len: int = 128) -> Dict[str, float]:
+        """Serve (model_name, request) pairs in order, greedy decoding each
+        under the shared budget. Outputs land in ``request.output``."""
+        t0 = time.perf_counter()
+        for name, req in tagged_reqs:
+            prompt = jnp.asarray([req.prompt], jnp.int32)
+            gen, _ = self.runtime.decode(name, prompt,
+                                         max_new_tokens=req.max_new_tokens,
+                                         max_len=max_len)
+            req.output.extend(int(t) for t in np.asarray(gen)[0])
+        st = self.runtime.stats()
+        st["total_s"] = time.perf_counter() - t0
+        st["requests"] = len(tagged_reqs)
+        return st
