@@ -1,63 +1,137 @@
 """Fig. 19a: SwapNet's own memory overhead — skeletons, intermediate
 activations, partition lookup tables — plus the pipelined-runtime section:
-overlap efficiency (fraction of t_in hidden behind t_ex) and block-cache
-hit rate at prefetch depths m = 1, 2, 3."""
+overlap efficiency (fraction of t_in hidden behind t_ex), block-cache hit
+rate, swap-in time and ACTUAL storage->host bytes per store backend
+(mmap / rawio / quant) at prefetch depths m = 1, 2, 3.
+
+Standalone CLI for the CI smoke matrix::
+
+    python -m benchmarks.bench_overhead --smoke
+    # -> results/BENCH_swap_store.json  (per-backend swap-in ms / bytes /
+    #    overlap efficiency: the perf-trajectory data point)
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import tempfile
 
 import jax
 import numpy as np
 
-from benchmarks.common import build_vision, emit, vision_infos
+from benchmarks.common import RESULTS_DIR, build_vision, emit, vision_infos
 from benchmarks.bench_coefficients import profile_delay_model
+from repro.core.cost_model import DelayModel
 from repro.core.partition import PartitionPlanner
 from repro.core.runtime import SwappedSequential
-from repro.core.swap_engine import BlockCache, LayerStore, MemoryLedger
+from repro.core.swap_engine import (BlockCache, LayerStore, MemoryLedger,
+                                    size_aware_policy)
 from repro.models import vision
 
 BATCH = 4
+STORE_BACKENDS = ("mmap", "rawio", "quant")
 
 
-def run_pipeline() -> None:
-    """Overlap + cache metrics of the depth-m prefetch pipeline on the resnet
-    workload (uniform layer sizes — the pipeline-friendly case): m=1 is the
-    serial floor (overlap 0 by construction), m=2 is the paper's double
-    buffer, m=3 shows what deeper prefetch buys. A second request on the same
-    engine reports the hot-block cache hit rate."""
-    dm = profile_delay_model()
+def _pipeline_point(backend: str, m: int, dm, units, infos, layers,
+                    budget: float, x) -> dict:
+    """One (backend, m) cell: cold + repeat swapped forward passes."""
+    with tempfile.TemporaryDirectory() as d:
+        ledger = MemoryLedger(int(budget))
+        cache = BlockCache(int(budget * 0.25), ledger)
+        sw = SwappedSequential(
+            units, lambda i, p, xx: vision.apply_layer(layers[i], p, xx),
+            d, prefetch_depth=m, ledger=ledger, cache=cache,
+            store_backend=backend)
+        # admission from the store's per-unit resident costs (ROADMAP (d))
+        cache.set_policy(size_aware_policy(
+            {n: sw.store.resident_nbytes(n) for n in sw.store.order},
+            cache.capacity))
+        # the cache reserve comes off the top; blocks get the rest. rawio
+        # holds 2x the logical bytes resident per unit (page-cache + staging
+        # copy — the w/o-uni-add arm's whole point), so its blocks must be
+        # planned against half the physical budget.
+        plan_budget = (budget - cache.capacity) / (2 if backend == "rawio"
+                                                   else 1)
+        sw.partition_with(infos, plan_budget, dm)
+        sw.forward(x)                    # warm (jit compiles)
+        cache.clear()                    # drop warm-pass cache entries
+        sw.engine.stats.__init__()
+        _, st1 = sw.forward(x)           # genuinely cold: all misses
+        sw.engine.stats.__init__()
+        _, st2 = sw.forward(x)           # repeat request: cache hits
+        point = {
+            "n_blocks": sw.plan.n_blocks,
+            "swap_in_ms": sum(st1["t_in"]) * 1e3,
+            "latency_ms": st1["latency_s"] * 1e3,
+            "bytes_swapped": st1["bytes_swapped"],
+            "bytes_logical": st1["bytes_logical"],
+            "overlap_efficiency": st1["overlap_efficiency"],
+            "cache_hit_rate": st2["cache_hit_rate"],
+            "peak_resident_mb": st2["peak_resident_mb"],
+        }
+        sw.close()
+    return point
+
+
+def _store_matrix(dm, budget_frac: float = 0.4) -> dict:
+    """The backend x m matrix on the resnet workload (uniform layer sizes —
+    the pipeline-friendly case): m=1 is the serial floor, m=2 the paper's
+    double buffer, m=3 deeper prefetch. A repeat request on the same engine
+    reports the hot-block cache hit rate."""
     _, layers, params, hw = build_vision("resnet")
     units = [(f"resnet{i:02d}", p) for i, p in enumerate(params)]
     infos = vision_infos(layers, params, hw, BATCH)
     total = float(sum(r.size for r in infos))
     largest = float(max(r.size for r in infos))
     # tight enough to force several blocks, roomy enough for an m=3 plan
-    budget = max(total * 0.4, 3.6 * largest)
+    budget = max(total * budget_frac, 3.6 * largest)
     x = jax.random.normal(jax.random.key(7), (BATCH, hw, hw, 3))
 
-    for m in (1, 2, 3):
-        with tempfile.TemporaryDirectory() as d:
-            ledger = MemoryLedger(int(budget))
-            cache = BlockCache(int(budget * 0.25), ledger)
-            sw = SwappedSequential(
-                units, lambda i, p, xx: vision.apply_layer(layers[i], p, xx),
-                d, mode="snet", prefetch_depth=m, ledger=ledger, cache=cache)
-            # the cache reserve comes off the top; blocks get the rest
-            sw.partition_with(infos, budget - cache.capacity, dm)
-            sw.forward(x)                    # warm (jit compiles)
-            cache.clear()                    # drop warm-pass cache entries
-            sw.engine.stats.__init__()
-            _, st1 = sw.forward(x)           # genuinely cold: all misses
-            sw.engine.stats.__init__()
-            _, st2 = sw.forward(x)           # repeat request: cache hits
-            n_blocks = sw.plan.n_blocks
-            sw.close()
-        emit(f"pipeline.m{m}", st1["latency_s"] * 1e6,
-             f"blocks={n_blocks};overlap_eff={st1['overlap_efficiency']:.3f};"
-             f"cache_hit_rate={st2['cache_hit_rate']:.3f};"
-             f"peak_mb={st2['peak_resident_mb']:.1f};"
-             f"budget_mb={budget/1e6:.1f}")
+    matrix = {"workload": "resnet", "batch": BATCH,
+              "budget_mb": budget / 1e6, "model_mb": total / 1e6,
+              "backends": {}}
+    for backend in STORE_BACKENDS:
+        rows = {}
+        for m in (1, 2, 3):
+            rows[f"m{m}"] = _pipeline_point(backend, m, dm, units, infos,
+                                            layers, budget, x)
+        matrix["backends"][backend] = rows
+    mmap_bytes = matrix["backends"]["mmap"]["m2"]["bytes_swapped"]
+    for backend in STORE_BACKENDS:
+        b = matrix["backends"][backend]["m2"]["bytes_swapped"]
+        matrix["backends"][backend]["bytes_vs_mmap"] = \
+            b / mmap_bytes if mmap_bytes else 1.0
+    return matrix
+
+
+def write_store_report(matrix: dict,
+                       path: str = None) -> str:
+    path = path or os.path.join(RESULTS_DIR, "BENCH_swap_store.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(matrix, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
+def run_pipeline(dm=None) -> None:
+    dm = dm or profile_delay_model()
+    matrix = _store_matrix(dm)
+    for backend, rows in matrix["backends"].items():
+        for m in (1, 2, 3):
+            p = rows[f"m{m}"]
+            emit(f"pipeline.{backend}.m{m}", p["latency_ms"] * 1e3,
+                 f"blocks={p['n_blocks']};"
+                 f"swap_in_ms={p['swap_in_ms']:.1f};"
+                 f"swapped_mb={p['bytes_swapped']/1e6:.1f};"
+                 f"overlap_eff={p['overlap_efficiency']:.3f};"
+                 f"cache_hit_rate={p['cache_hit_rate']:.3f};"
+                 f"peak_mb={p['peak_resident_mb']:.1f};"
+                 f"budget_mb={matrix['budget_mb']:.1f}")
+    path = write_store_report(matrix)
+    print(f"# swap-store matrix -> {path}", flush=True)
 
 
 def run() -> None:
@@ -82,4 +156,21 @@ def run() -> None:
              f"skeleton_mb={skel_mb:.4f};activations_mb={act_mb:.2f};"
              f"table_mb={table_mb:.3f};model_mb={total:.1f};"
              f"overhead_pct={100*(skel_mb+act_mb+table_mb)/total:.1f}%")
-    run_pipeline()
+    run_pipeline(dm)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="skip device-coefficient profiling (use the default "
+                         "DelayModel) and only run the store matrix — the "
+                         "cheap CI data point")
+    args = ap.parse_args()
+    if args.smoke:
+        run_pipeline(dm=DelayModel())
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

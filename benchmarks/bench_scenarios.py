@@ -12,13 +12,13 @@ import tempfile
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (build_vision, cosine_fidelity, emit,
                                scenario_models, timeit, vision_infos)
 from benchmarks.bench_coefficients import profile_delay_model
 from repro.core.budget import ModelDemand, allocate_budgets
+from repro.core.partition import PartitionPlanner
 from repro.core.runtime import SwappedSequential
 from repro.models import vision
 
@@ -54,26 +54,41 @@ def _bench_model(kind: str, gpu: bool, budget: float, dm, seed: int) -> Dict:
 
     units = [(f"{kind}{i:02d}", p) for i, p in enumerate(params)]
     infos = vision_infos(layers, params, hw, BATCH)
-    with tempfile.TemporaryDirectory() as d:
-        sw = SwappedSequential(
-            units, lambda i, p, xx: vision.apply_layer(layers[i], p, xx),
-            d, mode="snet", gpu_dispatch=gpu)
-        sw.partition_with(infos, budget, dm)
-        out_sn, _ = sw.forward(x)             # warm (jit compiles)
-        sw.engine.stats.__init__()
-        out_sn, st = sw.forward(x)
-        n_blocks = sw.plan.n_blocks
-        sw.close()
-    m_sn = st["peak_resident_mb"] * 1e6
-
-    return {
-        "model": kind, "size_mb": total / 1e6, "n_blocks": n_blocks,
-        "overlap_eff": st["overlap_efficiency"],
+    # the store-backend axis: SNet (mmap, the paper's system) plus the
+    # rawio and quant tiers on the SAME partition problem — per-backend
+    # swap-in bytes and latency for the Figs. 11-13 workloads
+    swapped = {}
+    floor = PartitionPlanner(infos, dm).min_feasible_budget() * 1.05
+    results = {
+        "model": kind, "size_mb": total / 1e6,
         "DInf": (m_dinf, t_dinf, 1.0),
         "DCha": (m_cha, t_cha, cosine_fidelity(ref, out_cha)),
         "TPrg": (m_tp, t_tp, cosine_fidelity(ref, out_tp)),
-        "SNet": (m_sn, st["latency_s"], cosine_fidelity(ref, out_sn)),
     }
+    for meth, backend in (("SNet", "mmap"), ("SNet_rawio", "rawio"),
+                          ("SNet_quant", "quant")):
+        with tempfile.TemporaryDirectory() as d:
+            sw = SwappedSequential(
+                units, lambda i, p, xx: vision.apply_layer(layers[i], p, xx),
+                d, gpu_dispatch=gpu, store_backend=backend)
+            # rawio holds 2x logical bytes resident (page-cache + staging
+            # copies; 3x with the GPU dispatch copy): plan accordingly,
+            # floor-lifted to the largest-layer physical minimum
+            mult = (3 if gpu else 2) if backend == "rawio" else 1
+            sw.partition_with(infos, max(budget / mult, floor), dm)
+            out_sn, _ = sw.forward(x)         # warm (jit compiles)
+            sw.engine.stats.__init__()
+            out_sn, st = sw.forward(x)
+            n_blocks = sw.plan.n_blocks
+            sw.close()
+        m_sn = st["peak_resident_mb"] * 1e6
+        results[meth] = (m_sn, st["latency_s"], cosine_fidelity(ref, out_sn))
+        swapped[meth] = st["bytes_swapped"]
+        if meth == "SNet":
+            results["n_blocks"] = n_blocks
+            results["overlap_eff"] = st["overlap_efficiency"]
+    results["swapped_bytes"] = swapped
+    return results
 
 
 def run() -> None:
@@ -92,7 +107,6 @@ def run() -> None:
         # Eq. 1 is share-based; highly unbalanced models (vgg's dominant fc —
         # the paper bumps VGG's budget for exactly this, §8.2 fn. 2) get
         # floor-lifted to their largest-layer physical minimum.
-        from repro.core.partition import PartitionPlanner
         floors = []
         for i, (kind, gpu) in enumerate(models):
             _, layers, params, hw = build_vision(kind, seed=i)
@@ -103,7 +117,8 @@ def run() -> None:
         for i, ((kind, gpu), b) in enumerate(zip(built, budgets)):
             r = _bench_model(kind, gpu, b, dm, seed=i)
             dinf_m, dinf_t, _ = r["DInf"]
-            for meth in ("DInf", "DCha", "TPrg", "SNet"):
+            for meth in ("DInf", "DCha", "TPrg", "SNet", "SNet_rawio",
+                         "SNet_quant"):
                 m, t, fid = r[meth]
                 extra = ""
                 if meth == "SNet":
@@ -111,6 +126,8 @@ def run() -> None:
                     # would be a misleading constant 0, so it is not emitted;
                     # bench_overhead's pipeline rows cover the cache)
                     extra = f";overlap_eff={r['overlap_eff']:.3f}"
+                if meth.startswith("SNet"):
+                    extra += f";swapped_mb={r['swapped_bytes'][meth]/1e6:.1f}"
                 emit(f"fig11_13.{scen}.{kind}{i}.{meth}",
                      t * 1e6,
                      f"mem_mb={m/1e6:.1f};fidelity={fid:.4f};"

@@ -82,6 +82,11 @@ class ModelConfig:
     norm_eps: float = 1e-6
     post_norms: bool = False     # gemma2 post-attn/post-ffn norms
     dtype: str = "bfloat16"
+    quant_eligible: bool = True  # may the quantized swap store serve this
+                                 # model? (int8 per-channel units; opt out
+                                 # where recurrent dynamics amplify weight
+                                 # error — the runtime then falls back to
+                                 # the exact mmap backend)
     source: str = ""             # citation for the config numbers
 
     # ------------------------------------------------------------------ utils

@@ -23,5 +23,8 @@ CONFIG = ModelConfig(
     d_frontend=512,        # conv extractor output dim
     act="gelu",
     tie_embeddings=False,
+    # masked-prediction targets are nearest-neighbour cluster ids: logit
+    # margins are tight, so this model opts out of int8 swap units
+    quant_eligible=False,
     source="HuBERT [arXiv:2106.07447]",
 )

@@ -18,5 +18,8 @@ CONFIG = ModelConfig(
     ssm=SSMConfig(kind="rwkv6", d_state=64, head_dim=64, chunk=128),
     act="relu_sq",       # rwkv channel-mix uses squared relu
     tie_embeddings=False,
+    # data-dependent decay: the WKV recurrence compounds per-step weight
+    # error across the sequence, so int8 swap units are not worth the I/O
+    quant_eligible=False,
     source="RWKV-6 Finch [arXiv:2404.05892]",
 )

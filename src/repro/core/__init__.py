@@ -13,4 +13,5 @@ from repro.core.scheduler import MultiDNNScheduler, ScheduledModel
 from repro.core.skeleton import (Skeleton, assemble, assemble_dummy,
                                  assemble_np, flatten_params)
 from repro.core.swap_engine import (BlockCache, LayerStore, MemoryLedger,
-                                    SwapEngine)
+                                    MmapStore, QuantizedStore, RawIOStore,
+                                    SwapEngine, size_aware_policy)

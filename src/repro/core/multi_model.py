@@ -23,7 +23,8 @@ from typing import Any, Dict, Optional, Tuple
 from repro.core.cost_model import DelayModel
 from repro.core.partition import BlockPlan
 from repro.core.runtime import SwappedModel
-from repro.core.swap_engine import BlockCache, MemoryLedger
+from repro.core.swap_engine import (BlockCache, MemoryLedger,
+                                    size_aware_policy)
 from repro.models.transformer import Model
 
 
@@ -41,10 +42,12 @@ class MultiModelRuntime:
 
     def __init__(self, budget: int, mode: str = "snet",
                  prefetch_depth: int = 2, cache_frac: float = 0.25,
-                 dm: Optional[DelayModel] = None, delta: float = 0.05):
+                 dm: Optional[DelayModel] = None, delta: float = 0.05,
+                 store_backend: Optional[str] = None):
         assert 0.0 <= cache_frac < 1.0
         self.budget = int(budget)
         self.mode = mode
+        self.store_backend = store_backend
         self.prefetch_depth = max(prefetch_depth, 1)
         self.delta = delta
         self.dm = dm if dm is not None else DelayModel()
@@ -55,21 +58,31 @@ class MultiModelRuntime:
 
     # ------------------------------------------------------------ registry
     def add_model(self, name: str, model: Model, params: dict,
-                  workdir: str) -> SwappedModel:
+                  workdir: str,
+                  store_backend: Optional[str] = None) -> SwappedModel:
+        """``store_backend`` overrides the runtime default per model (a
+        quant-ineligible config falls back to mmap either way)."""
         assert name not in self.models, f"duplicate model name {name!r}"
+        backend = store_backend or self.store_backend
         sm = SwappedModel(model, params, os.path.join(workdir, name),
                           mode=self.mode, prefetch_depth=self.prefetch_depth,
-                          ledger=self.ledger, cache=self.cache, name=name)
+                          ledger=self.ledger, cache=self.cache, name=name,
+                          store_backend=backend)
         self.models[name] = sm
         self._planned = False
         return sm
 
     def _pinned_bytes(self) -> int:
         """Bytes the engines will pin into the cache regardless of capacity
-        (shared blocks): reserved off the top of every model's block budget."""
+        (shared blocks): reserved off the top of every model's block budget.
+        Pinned units cost their RESIDENT bytes (quantized backends pin the
+        quantized payload)."""
         total = 0
         for sm in self.models.values():
-            total += sum(sm.store.nbytes(n) for n in sm.engine.pinned
+            # the ENGINE's store is the mode-resolved reader (copy_in /
+            # dummy_asm attach a 2-3x-residency view over the built store)
+            total += sum(sm.engine.store.resident_nbytes(n)
+                         for n in sm.engine.pinned
                          if n in sm.store.skeletons)
         return total
 
@@ -94,6 +107,14 @@ class MultiModelRuntime:
         for name, sm in self.models.items():
             plans[name] = sm.partition(b, self.dm, batch, seq,
                                        delta=self.delta)
+        # Cache admission informed by the partition tables' per-unit sizes
+        # (ROADMAP item (d)): admit exactly the units that provably co-fit,
+        # costed at their resident bytes (what a cache entry charges). The
+        # ENGINE's store is the mode-resolved reader, whose resident cost
+        # includes any ablation-mode extra copies.
+        sizes = {n: sm.engine.store.resident_nbytes(n)
+                 for sm in self.models.values() for n in sm.store.order}
+        self.cache.set_policy(size_aware_policy(sizes, self.cache.capacity))
         self._planned = True
         return plans
 
@@ -119,6 +140,8 @@ class MultiModelRuntime:
                 "overlap_efficiency": st.overlap_efficiency(),
                 "cache_hit_rate": st.cache_hit_rate(),
                 "bytes_swapped_mb": st.bytes_swapped / 1e6,
+                "bytes_logical_mb": st.bytes_logical / 1e6,
+                "store_backend": sm.store_backend,
             }
         return {
             "budget_mb": self.budget / 1e6,

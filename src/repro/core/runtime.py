@@ -1,10 +1,13 @@
 """SwappedModel: end-to-end swapped inference of any repro model (paper §3).
 
 Splits a model into swappable units (embedding, each layer, head), stores
-them via LayerStore, and executes a forward pass block-by-block under a
+them via a pluggable block store (``store_backend``: mmap | rawio | quant,
+see repro/store/), and executes a forward pass block-by-block under a
 memory budget with a depth-m prefetch pipeline (m=2 is the paper's double
-buffer; deeper pipelines absorb swap-in jitter). Bit-identical to the
-in-memory model (lossless — the paper's headline property).
+buffer; deeper pipelines absorb swap-in jitter). With the default (mmap)
+backend the output is bit-identical to the in-memory model (lossless — the
+paper's headline property); the quant backend trades a documented bounded
+quantization error for ~4x less swap-in I/O.
 
 Engines may share a MemoryLedger and BlockCache with other models — the
 multi-DNN serving path (core/multi_model.py) relies on this to keep several
@@ -23,9 +26,9 @@ import numpy as np
 
 from repro.core.cost_model import DelayModel, LayerInfo, layer_flops
 from repro.core.partition import BlockPlan, PartitionPlanner
-from repro.core.swap_engine import (BlockCache, LayerStore, MemoryLedger,
-                                    SwapEngine)
+from repro.core.swap_engine import BlockCache, MemoryLedger, SwapEngine
 from repro.models.layers import rms_norm, softcap
+from repro.store import build_store
 from repro.models.transformer import Model, apply_layer
 
 
@@ -125,6 +128,23 @@ def unit_infos(model: Model, units: Sequence[Unit], batch: int,
     return rows
 
 
+def resolve_backend(store_backend: Optional[str], mode: str) -> str:
+    """Default the store backend and reject nonsensical combinations: the
+    engine's ablation ``mode`` flags reinterpret the RAW file format, so
+    they compose only with the mmap backend (rawio IS the copy_in arm;
+    quant files cannot be read through the raw paths)."""
+    backend = store_backend or "mmap"
+    if backend != "mmap" and mode != "snet":
+        raise ValueError(f"store backend {backend!r} requires mode='snet' "
+                         f"(got mode={mode!r})")
+    return backend
+
+
+def store_opts(backend: str, gpu_dispatch: bool) -> dict:
+    """Per-backend build options derived from the executor flags."""
+    return {"gpu_dispatch": gpu_dispatch} if backend == "rawio" else {}
+
+
 class SwappedSequential:
     """Generic swapped executor over an arbitrary unit list (used by the
     scenario benchmarks for the paper's conv workloads)."""
@@ -133,12 +153,16 @@ class SwappedSequential:
                  mode: str = "snet", budget: Optional[int] = None,
                  gpu_dispatch: bool = False, prefetch_depth: int = 2,
                  ledger: Optional[MemoryLedger] = None,
-                 cache: Optional[BlockCache] = None):
+                 cache: Optional[BlockCache] = None,
+                 store_backend: Optional[str] = None):
         """named_units: [(name, params)]; apply_fn(i, params, x) -> x."""
         self.named_units = list(named_units)
         self.apply_fn = apply_fn
         self.prefetch_depth = max(prefetch_depth, 1)
-        self.store = LayerStore.build(self.named_units, workdir)
+        self.store_backend = resolve_backend(store_backend, mode)
+        self.store = build_store(self.named_units, workdir,
+                                 backend=self.store_backend,
+                                 **store_opts(self.store_backend, gpu_dispatch))
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
                                  gpu_dispatch=gpu_dispatch,
                                  ledger=ledger, cache=cache)
@@ -187,7 +211,10 @@ class SwappedSequential:
                    "t_in": list(st.t_in), "t_ex": list(st.t_ex),
                    "t_out": list(st.t_out),
                    "overlap_efficiency": st.overlap_efficiency(),
-                   "cache_hit_rate": st.cache_hit_rate()}
+                   "cache_hit_rate": st.cache_hit_rate(),
+                   "store_backend": self.store_backend,
+                   "bytes_swapped": st.bytes_swapped,
+                   "bytes_logical": st.bytes_logical}
 
     def close(self):
         self.engine.close()
@@ -201,11 +228,17 @@ class SwappedModel:
                  gpu_dispatch: bool = False, prefetch_depth: int = 2,
                  ledger: Optional[MemoryLedger] = None,
                  cache: Optional[BlockCache] = None,
-                 name: Optional[str] = None):
+                 name: Optional[str] = None,
+                 store_backend: Optional[str] = None):
         self.model = model
         self.cfg = model.cfg
         self.name = name or model.cfg.name
         self.prefetch_depth = max(prefetch_depth, 1)
+        self.store_backend = resolve_backend(store_backend, mode)
+        if self.store_backend == "quant" and not self.cfg.quant_eligible:
+            # per-model eligibility knob (configs): architectures whose
+            # dynamics amplify weight error serve from the exact store
+            self.store_backend = "mmap"
         self.units = split_units(model, params)
         prefix = f"{name}/" if name else ""
         for u in self.units:            # namespace units per model so a
@@ -218,7 +251,9 @@ class SwappedModel:
                 continue
             seen.add(u.name)
             store_units.append((u.name, u.params))
-        self.store = LayerStore.build(store_units, workdir)
+        self.store = build_store(store_units, workdir,
+                                 backend=self.store_backend,
+                                 **store_opts(self.store_backend, gpu_dispatch))
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
                                  gpu_dispatch=gpu_dispatch, pinned=pinned,
                                  ledger=ledger, cache=cache)
@@ -387,6 +422,9 @@ class SwappedModel:
             "meta_mb": self.store.meta_bytes() / 1e6,
             "overlap_efficiency": st.overlap_efficiency(),
             "cache_hit_rate": st.cache_hit_rate(),
+            "store_backend": self.store_backend,
+            "bytes_swapped": st.bytes_swapped,
+            "bytes_logical": st.bytes_logical,
         }
 
     def close(self):

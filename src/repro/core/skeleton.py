@@ -58,19 +58,26 @@ def _align(n: int) -> int:
     return (n + ALIGN - 1) // ALIGN * ALIGN
 
 
-def flatten_params(tree) -> Tuple[np.ndarray, Skeleton]:
-    """Serialize a param pytree into (byte buffer, skeleton)."""
+def skeleton_of(tree) -> Skeleton:
+    """The skeleton alone — layout metadata without materializing the flat
+    buffer (store backends with their own payload format need only this)."""
     leaves, treedef = jax.tree.flatten(tree)
     refs, cursor = [], 0
     for leaf in leaves:
         arr = np.asarray(leaf)
         refs.append(Ref(cursor, tuple(arr.shape), str(arr.dtype)))
         cursor = _align(cursor + arr.nbytes)
-    buf = np.zeros(cursor, np.uint8)
-    for leaf, ref in zip(leaves, refs):
+    return Skeleton(treedef, refs, cursor)
+
+
+def flatten_params(tree) -> Tuple[np.ndarray, Skeleton]:
+    """Serialize a param pytree into (byte buffer, skeleton)."""
+    skel = skeleton_of(tree)
+    buf = np.zeros(skel.nbytes, np.uint8)
+    for leaf, ref in zip(jax.tree.leaves(tree), skel.refs):
         arr = np.ascontiguousarray(np.asarray(leaf))
         buf[ref.offset:ref.offset + arr.nbytes] = arr.view(np.uint8).reshape(-1)
-    return buf, Skeleton(treedef, refs, cursor)
+    return buf, skel
 
 
 def assemble(skel: Skeleton, buf: jax.Array):

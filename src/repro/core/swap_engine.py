@@ -1,24 +1,26 @@
 """Block swapping controller (paper §4): swap-in / swap-out executor.
 
-Modes (the full system + the paper's ablation arms, Fig. 15):
-  * "snet"      — zero-copy swap-in: mem-mapped block file (direct-I/O
-                  analogue: no page-cache staging copy), host-side assembly by
-                  reference (numpy views), ONE host->device transfer per block
-                  (the irreducible DMA). Write-back-free swap-out: drop refs.
-  * "copy_in"   — w/o-uni-add: standard swap-in — read() into a page-cache
-                  copy, a staging copy, the device transfer, PLUS the GPU
-                  dispatch copy the paper eliminates. 2x resident bytes
-                  (3x for GPU-dispatched models).
-  * "dummy_asm" — w/o-mod-ske: zero-copy I/O but framework-default assembly:
-                  instantiate a dummy block and copy parameters in
-                  (per-tensor copies, 2x resident during assembly).
+Storage is a pluggable tier (``repro.store``): the engine asks its
+:class:`~repro.store.BlockStore` for each unit and does the bookkeeping —
+wall-clock (t_in split into I/O + assembly, t_out, and the stall time the
+executor spends waiting on prefetch futures), actual storage->host traffic
+(``SwapStats.bytes_swapped``; quantized backends move ~4x less than the
+logical unit bytes), and a resident-bytes ledger (peak is what the paper's
+Figs. 11-13 report).
 
-The engine tracks wall-clock (t_in split into I/O + assembly, t_out, and the
-stall time the executor spends waiting on prefetch futures — the visible part
-of t_in) against a resident-bytes ledger (peak is what the paper's Figs. 11-13
-report). The ledger may be PRIVATE (one model, the seed behaviour) or SHARED
-across several engines (the §6.2 multi-DNN scenario: co-resident models under
-one budget). Prefetch runs on a single loader thread — one swap-in channel,
+The paper's ablation arms (Fig. 15) remain the engine's ``mode`` flag and are
+resolved against the store:
+  * "snet"      — read the store through its own backend (zero-copy mmap for
+                  the default store; quantized+dequant for QuantizedStore);
+  * "copy_in"   — w/o-uni-add: reinterpret a raw store through RawIOStore
+                  (read() page-cache copy + staging copy + transfer, + the
+                  GPU dispatch copy for gpu_dispatch models);
+  * "dummy_asm" — w/o-mod-ske: zero-copy I/O but framework-default dummy
+                  assembly (per-tensor copies, 2x resident during assembly).
+
+The ledger may be PRIVATE (one model, the seed behaviour) or SHARED across
+several engines (the §6.2 multi-DNN scenario: co-resident models under one
+budget). Prefetch runs on a single loader thread — one swap-in channel,
 matching the paper's pipeline model — at any queue depth m >= 1.
 
 An optional LRU BlockCache keeps hot units (embeddings, shared blocks, small
@@ -29,58 +31,19 @@ no matter how many engines or handles reference them.
 from __future__ import annotations
 
 import gc
-import os
 import threading
 import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.store import (BlockStore, LayerStore, MmapStore, QuantizedStore,
+                         RawIOStore, as_reader)
 
-from repro.core.skeleton import (Skeleton, assemble_dummy, assemble_np,
-                                 flatten_params)
-
-
-# ------------------------------------------------------------------ store
-class LayerStore:
-    """Per-layer (smallest divisible unit) flat files + resident skeletons.
-
-    Blocks are ranges of layer units; adaptation only re-indexes ranges
-    (paper §6.2.2 operations 2-3), never rewrites files (operation 1 is the
-    one-time ``get_layers`` division)."""
-
-    def __init__(self, workdir: str):
-        self.workdir = workdir
-        self.skeletons: Dict[str, Skeleton] = {}
-        self.order: List[str] = []
-
-    @classmethod
-    def build(cls, units: Sequence[Tuple[str, dict]], workdir: str) -> "LayerStore":
-        os.makedirs(workdir, exist_ok=True)
-        store = cls(workdir)
-        for name, params in units:
-            store.order.append(name)
-            if name in store.skeletons:     # shared unit (zamba2): stored once
-                continue
-            buf, skel = flatten_params(params)
-            with open(store._path(name), "wb") as fh:
-                fh.write(buf.tobytes())
-            store.skeletons[name] = skel
-        return store
-
-    def _path(self, name: str) -> str:
-        return os.path.join(self.workdir, name.replace("/", "_") + ".bin")
-
-    def nbytes(self, name: str) -> int:
-        return self.skeletons[name].nbytes
-
-    def meta_bytes(self) -> int:
-        """Resident skeleton overhead (paper Fig. 19a: 0.01-0.06 MB/model)."""
-        return sum(s.meta_bytes() for s in self.skeletons.values())
+__all__ = ["LayerStore", "MmapStore", "RawIOStore", "QuantizedStore",
+           "MemoryLedger", "BlockCache", "size_aware_policy", "BlockHandle",
+           "SwapStats", "SwapEngine"]
 
 
 # ------------------------------------------------------------------ ledger
@@ -126,6 +89,41 @@ class MemoryLedger:
 
 
 # ------------------------------------------------------------------ cache
+def size_aware_policy(unit_sizes: Mapping[str, int],
+                      capacity: int) -> Callable[[str, int], bool]:
+    """Admission informed by the partition table's per-unit sizes (ROADMAP
+    item (d), shipped): admit exactly the units small enough that the whole
+    admitted set provably co-fits in ``capacity``.
+
+    The threshold is the largest size s such that EVERY unit of size <= s
+    fits in ``capacity`` together (distinct sizes considered ascending,
+    whole size-classes at a time: admitting some-but-not-all units of one
+    size would let the marginal ones thrash the cyclic block scan and evict
+    the genuinely hot small units). Unlike the static ``admit_frac``
+    heuristic this adapts to the actual size distribution: a model of many
+    small units caches them all, a model of few huge blocks caches none.
+    Unknown names fall back to their observed size.
+    """
+    sizes = sorted(s for s in unit_sizes.values() if s > 0)
+    cum, threshold, i = 0, 0, 0
+    while i < len(sizes):
+        j = i
+        while j < len(sizes) and sizes[j] == sizes[i]:
+            j += 1
+        group = sizes[i] * (j - i)
+        if cum + group > capacity:
+            break
+        cum += group
+        threshold = sizes[i]
+        i = j
+
+    def policy(name: str, nbytes: int) -> bool:
+        size = unit_sizes.get(name, nbytes)
+        return 0 < size <= threshold
+
+    return policy
+
+
 class BlockCache:
     """LRU cache of assembled units, shared across engines and requests.
 
@@ -136,16 +134,20 @@ class BlockCache:
     ``capacity`` bytes are exceeded, but only when no handle still references
     them (refcounted, so the ledger never loses sight of live bytes).
 
-    Admission is thresholded: only units no larger than ``admit_frac`` of
-    capacity enter. A block traversal is a cyclic scan — admit-everything LRU
-    would evict each unit just before its next use and hit 0% — whereas the
-    small hot units the paper calls out (embeddings, shared blocks, small
-    heads) co-reside comfortably and hit on every repeat request."""
+    Admission is a pluggable ``policy`` (a ``(name, nbytes) -> bool``
+    constructor argument). Default (policy=None) is the thresholded
+    heuristic: only units no larger than ``admit_frac`` of capacity enter —
+    a block traversal is a cyclic scan, so admit-everything LRU would evict
+    each unit just before its next use and hit 0%. :func:`size_aware_policy`
+    upgrades this with the partition table's per-unit sizes (installed by
+    ``MultiModelRuntime.plan``)."""
 
     def __init__(self, capacity: int, ledger: MemoryLedger,
-                 admit_frac: float = 0.25):
+                 admit_frac: float = 0.25,
+                 policy: Optional[Callable[[str, int], bool]] = None):
         self.capacity = capacity
         self.admit_frac = admit_frac
+        self.policy = policy
         self.ledger = ledger
         self._lock = threading.RLock()
         # name -> [params, ledger_bytes, refcount]
@@ -164,12 +166,21 @@ class BlockCache:
         with self._lock:
             return frozenset(self._pinned)
 
+    def set_policy(self,
+                   policy: Optional[Callable[[str, int], bool]]) -> None:
+        with self._lock:
+            self.policy = policy
+
     def admits(self, name: str, nbytes: int) -> bool:
-        """Pinned units always enter; others only if small enough to be a
-        plausible hot unit (see class docstring)."""
+        """Pinned units always enter; others go through the admission policy
+        (per-unit-size aware when installed, else the admit_frac heuristic).
+        ``nbytes`` is the unit's RESIDENT cost when cached (stored bytes for
+        quantized backends)."""
         with self._lock:
             if name in self._pinned:
                 return True
+            if self.policy is not None:
+                return self.policy(name, nbytes)
             return 0 < nbytes <= self.capacity * self.admit_frac
 
     # ------------------------------------------------------------ lookup
@@ -243,7 +254,7 @@ class BlockCache:
 class BlockHandle:
     names: List[str]
     params: List[dict]           # assembled (by reference) param trees
-    nbytes: int
+    nbytes: int                  # logical (dequantized) block bytes
     resident_bytes: int          # ledger bytes incl. mode-induced extra copies
     io_s: float = 0.0
     asm_s: float = 0.0
@@ -259,7 +270,8 @@ class SwapStats:
     t_out: List[float] = field(default_factory=list)
     t_wait: List[float] = field(default_factory=list)   # executor stalls
     peak_resident: int = 0
-    bytes_swapped: int = 0
+    bytes_swapped: int = 0       # actual storage->host I/O traffic
+    bytes_logical: int = 0       # dequantized bytes those swap-ins delivered
     cache_hits: int = 0
     cache_misses: int = 0
 
@@ -278,20 +290,21 @@ class SwapStats:
 
 
 class SwapEngine:
-    """One model's swap-in/swap-out executor.
+    """One model's swap-in/swap-out executor over a pluggable BlockStore.
 
     ``ledger`` and ``cache`` may be shared with other engines (multi-model
     serving under one budget); by default each engine gets a private ledger
     seeded from ``budget`` and a pin-only cache (capacity 0: only ``pinned``
-    units are retained, the seed behaviour)."""
+    units are retained, the seed behaviour). ``mode`` selects the paper's
+    ablation arms against a raw-format store (see module docstring)."""
 
-    def __init__(self, store: LayerStore, mode: str = "snet",
+    def __init__(self, store: BlockStore, mode: str = "snet",
                  budget: Optional[int] = None, gpu_dispatch: bool = False,
                  pinned: Sequence[str] = (),
                  ledger: Optional[MemoryLedger] = None,
                  cache: Optional[BlockCache] = None):
         assert mode in ("snet", "copy_in", "dummy_asm")
-        self.store = store
+        self.store = as_reader(store, mode=mode, gpu_dispatch=gpu_dispatch)
         self.mode = mode
         self.gpu_dispatch = gpu_dispatch
         self.ledger = ledger if ledger is not None else MemoryLedger(budget)
@@ -327,45 +340,6 @@ class SwapEngine:
         self.stats.peak_resident = max(self.stats.peak_resident, total)
 
     # -------------------------------------------------------------- swap-in
-    def _load_unit(self, name: str) -> Tuple[dict, int, float, float]:
-        """Returns (params, ledger_bytes, io_s, asm_s)."""
-        skel = self.store.skeletons[name]
-        path = self.store._path(name)
-        n = skel.nbytes
-        if n == 0:                      # parameter-less unit (pool/gap/...)
-            return assemble_np(skel, np.zeros(0, np.uint8)), 0, 0.0, 0.0
-
-        if self.mode == "copy_in":
-            t0 = time.perf_counter()
-            with open(path, "rb") as fh:       # read(): page-cache copy
-                raw = fh.read()
-            staged = np.frombuffer(raw, np.uint8).copy()   # staging copy
-            t1 = time.perf_counter()
-            host_tree = assemble_np(skel, staged)
-            dev = jax.tree.map(jnp.asarray, host_tree)     # device transfer
-            if self.gpu_dispatch:
-                dev = jax.tree.map(jnp.array, dev)         # dispatch copy (.to('cuda'))
-                extra = 3 * n
-            else:
-                extra = 2 * n
-            t2 = time.perf_counter()
-            return dev, extra, t1 - t0, t2 - t1
-
-        # zero-copy I/O path (snet / dummy_asm): memmap = direct fetch channel
-        t0 = time.perf_counter()
-        buf = np.memmap(path, dtype=np.uint8, mode="r")
-        t1 = time.perf_counter()
-        if self.mode == "dummy_asm":
-            host_tree = assemble_dummy(skel, buf)          # dummy-model copies
-            dev = jax.tree.map(jnp.asarray, host_tree)
-            extra = 2 * n
-        else:
-            host_tree = assemble_np(skel, buf)             # views: zero copy
-            dev = jax.tree.map(jnp.asarray, host_tree)     # the one DMA
-            extra = n
-        t2 = time.perf_counter()
-        return dev, extra, t1 - t0, t2 - t1
-
     def swap_in(self, names: Sequence[str]) -> BlockHandle:
         params: List[dict] = []
         cached: List[str] = []
@@ -378,25 +352,31 @@ class SwapEngine:
                     cached.append(name)
                     self.stats.cache_hits += 1
                     continue
-                p, extra, io, asm = self._load_unit(name)
+                r = self.store.read_unit(name)
                 n = self.store.nbytes(name)
-                params.append(p)
-                io_s += io
-                asm_s += asm
-                loaded += n
+                params.append(r.params)
+                io_s += r.io_s
+                asm_s += r.asm_s
+                loaded += r.io_bytes
+                self.stats.bytes_logical += n
                 self.stats.cache_misses += 1
-                if n and self.cache.admits(name, n):
+                # admission reasons in the unit's RESIDENT cost — exactly
+                # what the cache entry will charge the ledger (2-3x logical
+                # for rawio, the quantized payload for quant): sizing by
+                # stored bytes would admit sets that overflow capacity and
+                # thrash the cyclic scan to a 0% hit rate.
+                if n and self.cache.admits(name, r.ledger_bytes):
                     # hot unit: retained across requests, charged to the
                     # ledger once under the cache's key — not this handle's.
-                    self.cache.put(name, p, extra)
+                    self.cache.put(name, r.params, r.ledger_bytes)
                     if self.cache.acquire(name, count=False) is not None:
                         cached.append(name)
                     else:           # raced out by eviction: charge the handle
                         total += n
-                        ledger += extra
+                        ledger += r.ledger_bytes
                 else:
                     total += n
-                    ledger += extra
+                    ledger += r.ledger_bytes
             handle = BlockHandle(list(names), params, total, ledger,
                                  io_s, asm_s, cached_names=cached)
             self._ledger_add(handle)

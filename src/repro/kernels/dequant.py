@@ -1,0 +1,74 @@
+"""dequant_int8: per-channel int8 -> float dequantization on device.
+
+The QuantizedStore backend writes swap units as int8 values + one fp32 scale
+per output channel (~4x fewer stored bytes than fp32). Swap-in then transfers
+only the quantized payload host->device and reconstructs the fp parameters
+THERE — the dequant multiply rides the H2D DMA the swap-in pays anyway, so
+the host-side critical path does no extra work per byte saved.
+
+Layout: values are [R, C] int8 where C is the channel (last) axis of the
+original tensor and R the flattened rest; ``scales`` is [C] fp32. Output is
+``out[r, c] = values[r, c] * scales[c]`` cast to the target dtype — a pure
+VPU elementwise kernel, gridded over row blocks so one block of the unit
+streams through VMEM while the next transfers (same double-buffered shape as
+swap_linear's weight stream).
+
+Error bound (documented contract, asserted in tests): quantization is
+symmetric round-to-nearest at 127 steps per channel, so round-tripping a
+tensor x reproduces it within ``|x̂ - x| <= scale_c / 2`` elementwise, i.e.
+``max|x[:, c]| / 254`` per channel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# int8 VMEM tiling is (32, 128); keep row blocks a multiple of 32.
+_BLOCK_R = 256
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def dequant_int8(values: jax.Array, scales: jax.Array,
+                 out_dtype=jnp.float32, *, block_r: int = _BLOCK_R,
+                 interpret: bool = False) -> jax.Array:
+    """values [R, C] int8, scales [C] fp32 -> [R, C] out_dtype."""
+    R, C = values.shape
+    assert scales.shape == (C,), (values.shape, scales.shape)
+    br = min(block_r, R)
+    pad = (-R) % br
+    if pad:                       # ragged tail: pad rows, slice after
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad, C), values.dtype)], axis=0)
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=((R + pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, C), lambda i: (i, 0)),          # quantized rows
+            pl.BlockSpec((1, C), lambda i: (0, 0)),           # channel scales
+        ],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R + pad, C), out_dtype),
+        interpret=interpret,
+    )(values, scales.reshape(1, C))
+    return out[:R] if pad else out
+
+
+def quantize_int8(arr: np.ndarray):
+    """Build-time host quantizer: symmetric per-channel int8.
+
+    Channels are the LAST axis (output features of (in, out) matmuls and of
+    HWIO convs); the rest flattens to rows. Returns (values int8 [R, C],
+    scales fp32 [C]). Zero channels get scale 1.0 so dequant is exact there.
+    """
+    x = np.asarray(arr, np.float32)
+    x2 = x.reshape(-1, x.shape[-1]) if x.ndim >= 2 else x.reshape(1, -1)
+    amax = np.max(np.abs(x2), axis=0)
+    scales = np.where(amax > 0.0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.rint(x2 / scales[None, :]), -127, 127).astype(np.int8)
+    return q, scales

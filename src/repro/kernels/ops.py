@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.dequant import dequant_int8 as _dequant_int8
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.swap_linear import swap_linear as _swap_linear
 
@@ -34,6 +35,17 @@ def swap_linear(x, w, b=None, *, act: str = "none",
             return _swap_linear(x, w, b, act=act, interpret=False)
         return _ref.swap_linear_ref(x, w, b, act=act)
     return _swap_linear(x, w, b, act=act, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def dequant_int8(values, scales, out_dtype=jnp.float32, *,
+                 interpret: Optional[bool] = None):
+    """Dequant-on-swap-in; interpret=None -> auto (TPU real, CPU ref)."""
+    if interpret is None:
+        if _on_tpu():
+            return _dequant_int8(values, scales, out_dtype, interpret=False)
+        return _ref.dequant_int8_ref(values, scales, out_dtype)
+    return _dequant_int8(values, scales, out_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -19,6 +19,13 @@ def swap_linear_ref(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     return r.astype(x.dtype)
 
 
+def dequant_int8_ref(values: jax.Array, scales: jax.Array,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """values [R, C] int8, scales [C] fp32 -> values * scales[None, :]."""
+    return (values.astype(jnp.float32)
+            * scales.astype(jnp.float32)[None, :]).astype(out_dtype)
+
+
 def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
              u: jax.Array) -> jax.Array:
     """Literal per-step WKV6 recurrence. r,k,v,w_log: [BH,S,hd]; u: [BH,hd]."""

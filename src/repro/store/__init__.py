@@ -1,0 +1,39 @@
+"""Pluggable tiered block-store subsystem (storage tier of the swap path).
+
+Pick a backend by name::
+
+    store = build_store(units, workdir, backend="quant")
+    engine = SwapEngine(store)
+
+Backends: ``mmap`` (zero-copy, the paper's full system), ``rawio`` (read()-
+based, the copy_in ablation arm), ``quant`` (int8 per-channel swap units +
+Pallas dequant-on-swap-in). See base.py for the BlockStore contract.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple, Type
+
+from repro.store.base import BlockStore, UnitRead, as_reader, escape_name
+from repro.store.mmap_store import LayerStore, MmapStore
+from repro.store.quantized_store import QuantizedStore
+from repro.store.rawio_store import RawIOStore
+
+STORE_BACKENDS: Dict[str, Type[BlockStore]] = {
+    "mmap": MmapStore,
+    "rawio": RawIOStore,
+    "quant": QuantizedStore,
+}
+
+
+def build_store(units: Sequence[Tuple[str, dict]], workdir: str,
+                backend: str = "mmap", **opts) -> BlockStore:
+    """Serialize ``units`` under ``workdir`` through the named backend."""
+    if backend not in STORE_BACKENDS:
+        raise ValueError(f"unknown store backend {backend!r}; "
+                         f"choose from {sorted(STORE_BACKENDS)}")
+    return STORE_BACKENDS[backend].build(units, workdir, **opts)
+
+
+__all__ = ["BlockStore", "UnitRead", "MmapStore", "RawIOStore",
+           "QuantizedStore", "LayerStore", "STORE_BACKENDS", "build_store",
+           "as_reader", "escape_name"]

@@ -1,0 +1,189 @@
+"""Pluggable tiered block-store subsystem: the storage tier of the swap path.
+
+SwapNet (paper §4-§5) removes the redundant memory operations from swap-in;
+once those copies are gone the next bottleneck is the storage tier itself —
+raw I/O bytes per block and how they travel storage -> host -> device. A
+:class:`BlockStore` owns exactly that tier: how a model's swappable units are
+laid out at build time and how one unit is read back at swap-in. The engine
+(`repro.core.swap_engine.SwapEngine`) no longer knows about files; it asks
+its store for a :class:`UnitRead` and does the bookkeeping.
+
+Backends (see the sibling modules):
+
+  * ``MmapStore``      — zero-copy swap-in (the paper's full system): memmap
+                         the unit file, host assembly by reference, one H2D
+                         transfer. ``assembly="dummy"`` is the w/o-mod-ske
+                         ablation arm (framework-default dummy-model copies).
+  * ``RawIOStore``     — read()-based swap-in (the w/o-uni-add / ``copy_in``
+                         ablation arm): page-cache copy + staging copy +
+                         transfer (+ GPU dispatch copy when modelled).
+  * ``QuantizedStore`` — int8 per-channel quantized swap units written at
+                         build time (~4x fewer stored bytes), dequantized
+                         ON DEVICE by a Pallas kernel after the (already
+                         cheaper) H2D transfer — dequant rides the DMA the
+                         swap-in pays anyway instead of adding host work.
+
+File naming is collision-free: ``_`` is escaped before ``/`` is replaced, so
+``"a/b"`` and ``"a_b"`` never map to the same file (a latent bug in the old
+``LayerStore._path``).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+if TYPE_CHECKING:       # repro.core.skeleton is imported lazily at call time:
+    # repro.core.__init__ imports swap_engine which imports this package, so
+    # a module-level import here would be circular when repro.store loads
+    # first.
+    from repro.core.skeleton import Skeleton
+
+
+def escape_name(name: str) -> str:
+    """Collision-free filename escaping: ``_`` -> ``__`` first, then
+    ``/`` -> ``_.`` — injective, so distinct unit names (``"a/b"`` vs
+    ``"a_b"``) can never share a file."""
+    return name.replace("_", "__").replace("/", "_.")
+
+
+@dataclass
+class UnitRead:
+    """One unit's swap-in, as performed by a store backend.
+
+    ``params``       — assembled (device-transferred) parameter tree;
+    ``io_bytes``     — bytes actually moved storage -> host (what
+                       ``SwapStats.bytes_swapped`` accumulates; quantized
+                       backends move ~4x less than the logical unit size);
+    ``ledger_bytes`` — resident bytes to charge to the memory ledger
+                       (mode-induced extra copies included);
+    ``io_s/asm_s``   — the t_in split: fetch vs assembly wall-clock.
+    """
+    params: Any
+    io_bytes: int
+    ledger_bytes: int
+    io_s: float = 0.0
+    asm_s: float = 0.0
+
+
+class BlockStore:
+    """Interface + shared layout for per-unit block storage.
+
+    Contract (what `SwapEngine` relies on):
+      * ``build(units, workdir)``   — one-time serialization of the model's
+        smallest divisible units; shared units (same name) are stored once;
+      * ``open()``                  — prepare for reading (idempotent hook);
+      * ``read_unit(name)``         — one unit storage -> host -> device,
+        returning a :class:`UnitRead`;
+      * ``nbytes(name)``            — LOGICAL (dequantized) unit bytes: what
+        partitioning and block accounting reason about;
+      * ``stored_nbytes(name)``     — bytes the unit occupies on storage
+        (== ``nbytes`` except for quantized backends);
+      * ``resident_nbytes(name)``   — bytes ONE resident copy costs this
+        backend at runtime: what the ledger is charged per un-cached read
+        (stored bytes plus any mode-induced extra copies — rawio holds 2-3x,
+        quant holds the quantized payload). Cache admission reasons in this
+        currency;
+      * ``meta_bytes()``            — resident metadata overhead (skeletons,
+        paper Fig. 19a).
+
+    Blocks are ranges of units; adaptation only re-indexes ranges (paper
+    §6.2.2 operations 2-3), never rewrites files.
+    """
+
+    backend = "abstract"
+    raw_format = False      # True: on-disk files are the raw flat-fp layout
+    suffix = ".bin"
+
+    def __init__(self, workdir: str):
+        self.workdir = workdir
+        self.skeletons: Dict[str, "Skeleton"] = {}
+        self.order: List[str] = []
+
+    # ------------------------------------------------------------ build
+    @classmethod
+    def build(cls, units: Sequence[Tuple[str, dict]], workdir: str,
+              **opts) -> "BlockStore":
+        os.makedirs(workdir, exist_ok=True)
+        store = cls(workdir, **opts)
+        for name, params in units:
+            store.order.append(name)
+            if name in store.skeletons:     # shared unit (zamba2): once
+                continue
+            store._write_unit(name, params)
+        return store.open()
+
+    def _write_unit(self, name: str, params: dict) -> None:
+        raise NotImplementedError
+
+    def _write_raw(self, name: str, params: dict) -> None:
+        """Shared raw layout: one contiguous flat-fp buffer per unit."""
+        from repro.core.skeleton import flatten_params
+        buf, skel = flatten_params(params)
+        with open(self._path(name), "wb") as fh:
+            fh.write(buf.tobytes())
+        self.skeletons[name] = skel
+
+    @classmethod
+    def attach(cls, other: "BlockStore", **opts) -> "BlockStore":
+        """A reader over ANOTHER store's already-built raw files (shared
+        skeletons, no rebuild) — how the engine's ablation ``mode`` flags
+        reinterpret one set of files through a different swap-in path."""
+        if not (cls.raw_format and other.raw_format):
+            raise TypeError(
+                f"cannot attach {cls.__name__} to {type(other).__name__}: "
+                "both ends must use the raw flat-fp file format")
+        store = cls(other.workdir, **opts)
+        store.skeletons = other.skeletons
+        store.order = other.order
+        return store.open()
+
+    # ------------------------------------------------------------ read
+    def open(self) -> "BlockStore":
+        """Prepare the store for reading. Idempotent; returns self."""
+        return self
+
+    def read_unit(self, name: str) -> UnitRead:
+        raise NotImplementedError
+
+    def _empty_unit(self, name: str) -> UnitRead:
+        """Parameter-less unit (pool/gap/...): nothing to fetch."""
+        from repro.core.skeleton import assemble_np
+        skel = self.skeletons[name]
+        return UnitRead(assemble_np(skel, np.zeros(0, np.uint8)), 0, 0)
+
+    # ------------------------------------------------------------ sizes
+    def _path(self, name: str) -> str:
+        return os.path.join(self.workdir, escape_name(name) + self.suffix)
+
+    def nbytes(self, name: str) -> int:
+        return self.skeletons[name].nbytes
+
+    def stored_nbytes(self, name: str) -> int:
+        return self.skeletons[name].nbytes
+
+    def resident_nbytes(self, name: str) -> int:
+        return self.stored_nbytes(name)
+
+    def meta_bytes(self) -> int:
+        """Resident skeleton overhead (paper Fig. 19a: 0.01-0.06 MB/model)."""
+        return sum(s.meta_bytes() for s in self.skeletons.values())
+
+
+def as_reader(store: BlockStore, mode: str = "snet",
+              gpu_dispatch: bool = False) -> BlockStore:
+    """Resolve the engine's ablation ``mode`` against a built store.
+
+    ``snet`` reads the store through its own backend; ``copy_in`` and
+    ``dummy_asm`` (the paper's Fig. 15 ablation arms) reinterpret a
+    raw-format store through the RawIO / dummy-assembly paths.
+    """
+    from repro.store.mmap_store import MmapStore
+    from repro.store.rawio_store import RawIOStore
+    if mode == "copy_in":
+        return RawIOStore.attach(store, gpu_dispatch=gpu_dispatch)
+    if mode == "dummy_asm":
+        return MmapStore.attach(store, assembly="dummy")
+    return store.open()
