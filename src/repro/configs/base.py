@@ -83,10 +83,19 @@ class ModelConfig:
     post_norms: bool = False     # gemma2 post-attn/post-ffn norms
     dtype: str = "bfloat16"
     quant_eligible: bool = True  # may the quantized swap store serve this
-                                 # model? (int8 per-channel units; opt out
+                                 # model? (per-channel units; opt out
                                  # where recurrent dynamics amplify weight
                                  # error — the runtime then falls back to
                                  # the exact mmap backend)
+    swap_precision: str = "int8" # quantized swap-unit precision when the
+                                 # quant store serves this model: "int8"
+                                 # (127 steps/channel, ~4x fewer swap bytes
+                                 # than fp32) or "int4" (packed two-per-
+                                 # byte, ~8x, error bound max|w[:,c]|/14) —
+                                 # per-arch by error tolerance; ignored by
+                                 # exact backends and when quant_eligible
+                                 # is False. A serve/runtime `precision`
+                                 # override wins over this default.
     source: str = ""             # citation for the config numbers
 
     # ------------------------------------------------------------------ utils

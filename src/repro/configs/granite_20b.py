@@ -17,5 +17,8 @@ CONFIG = ModelConfig(
     rope_theta=10000.0,
     act="gelu",   # gpt_bigcode-style MLP per the granite-20b-code card
     tie_embeddings=False,
+    swap_precision="int4",  # big dense feed-forward stacks tolerate 4-bit
+                            # per-channel weights (GPTQ-regime); halves the
+                            # swap bytes of the quantized store again
     source="IBM Granite Code Models [arXiv:2405.04324]",
 )

@@ -71,6 +71,29 @@ class DelayModel:
         return 1.0 - float(np.sum((y - pred) ** 2) / max(ss, 1e-30))
 
 
+def resident_infos(infos: Sequence[LayerInfo], store,
+                   names: Optional[Sequence[str]] = None) -> List[LayerInfo]:
+    """Re-cost the info table in RESIDENT bytes so ``simulate_pipeline`` /
+    the block-plan search see the working set the ledger will actually be
+    charged: quantized-resident units (the fused swap path) cost their
+    stored payload — 4-8x less than logical — so plans pack more layers per
+    block under the same budget. ``names`` aligns rows with store unit
+    names when they differ from ``LayerInfo.name`` (SwappedSequential);
+    ``min`` keeps ablation backends whose resident cost EXCEEDS logical
+    (rawio's staging copies) planned at logical size, matching the seed's
+    behaviour for them."""
+    names = [r.name for r in infos] if names is None else list(names)
+    out = []
+    for r, name in zip(infos, names):
+        try:
+            resident = store.resident_nbytes(name)
+        except KeyError:
+            out.append(r)
+            continue
+        out.append(dataclasses.replace(r, size=min(r.size, resident)))
+    return out
+
+
 # ---------------------------------------------------------------- info table
 def _matmul_params(tree) -> int:
     import jax

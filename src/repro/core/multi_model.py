@@ -43,11 +43,13 @@ class MultiModelRuntime:
     def __init__(self, budget: int, mode: str = "snet",
                  prefetch_depth: int = 2, cache_frac: float = 0.25,
                  dm: Optional[DelayModel] = None, delta: float = 0.05,
-                 store_backend: Optional[str] = None):
+                 store_backend: Optional[str] = None,
+                 precision: Optional[str] = None):
         assert 0.0 <= cache_frac < 1.0
         self.budget = int(budget)
         self.mode = mode
         self.store_backend = store_backend
+        self.precision = precision
         self.prefetch_depth = max(prefetch_depth, 1)
         self.delta = delta
         self.dm = dm if dm is not None else DelayModel()
@@ -59,15 +61,19 @@ class MultiModelRuntime:
     # ------------------------------------------------------------ registry
     def add_model(self, name: str, model: Model, params: dict,
                   workdir: str,
-                  store_backend: Optional[str] = None) -> SwappedModel:
+                  store_backend: Optional[str] = None,
+                  precision: Optional[str] = None) -> SwappedModel:
         """``store_backend`` overrides the runtime default per model (a
-        quant-ineligible config falls back to mmap either way)."""
+        quant-ineligible config falls back to mmap either way);
+        ``precision`` overrides the config's per-model swap precision
+        (int8 | int4) for the quant backend."""
         assert name not in self.models, f"duplicate model name {name!r}"
         backend = store_backend or self.store_backend
         sm = SwappedModel(model, params, os.path.join(workdir, name),
                           mode=self.mode, prefetch_depth=self.prefetch_depth,
                           ledger=self.ledger, cache=self.cache, name=name,
-                          store_backend=backend)
+                          store_backend=backend,
+                          precision=precision or self.precision)
         self.models[name] = sm
         self._planned = False
         return sm
@@ -141,7 +147,11 @@ class MultiModelRuntime:
                 "cache_hit_rate": st.cache_hit_rate(),
                 "bytes_swapped_mb": st.bytes_swapped / 1e6,
                 "bytes_logical_mb": st.bytes_logical / 1e6,
+                "bytes_resident_quantized_mb":
+                    st.bytes_resident_quantized / 1e6,
+                "vmem_working_set_mb": st.vmem_working_set / 1e6,
                 "store_backend": sm.store_backend,
+                "precision": sm.precision,
             }
         return {
             "budget_mb": self.budget / 1e6,

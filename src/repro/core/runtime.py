@@ -7,7 +7,11 @@ memory budget with a depth-m prefetch pipeline (m=2 is the paper's double
 buffer; deeper pipelines absorb swap-in jitter). With the default (mmap)
 backend the output is bit-identical to the in-memory model (lossless — the
 paper's headline property); the quant backend trades a documented bounded
-quantization error for ~4x less swap-in I/O.
+quantization error for 4x (int8) to 8x (int4) less swap-in I/O, keeps
+units quantized-RESIDENT (fp is never materialized for MLP/head weights —
+they stream through the fused dequant-matmul kernel; other consumers
+dequantize at use), and lets the block planner pack more layers per block
+since the ledger is charged payload bytes.
 
 Engines may share a MemoryLedger and BlockCache with other models — the
 multi-DNN serving path (core/multi_model.py) relies on this to keep several
@@ -24,10 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import DelayModel, LayerInfo, layer_flops
+from repro.core.cost_model import (DelayModel, LayerInfo, layer_flops,
+                                   resident_infos)
 from repro.core.partition import BlockPlan, PartitionPlanner
 from repro.core.swap_engine import BlockCache, MemoryLedger, SwapEngine
-from repro.models.layers import rms_norm, softcap
+from repro.kernels.qtensor import (QuantizedTensor, cast_unit_params,
+                                   materialize_tree)
+from repro.kernels.swap_linear import vmem_bytes
+from repro.models.layers import linear, rms_norm, softcap
 from repro.store import build_store
 from repro.models.transformer import Model, apply_layer
 
@@ -140,9 +148,31 @@ def resolve_backend(store_backend: Optional[str], mode: str) -> str:
     return backend
 
 
-def store_opts(backend: str, gpu_dispatch: bool) -> dict:
-    """Per-backend build options derived from the executor flags."""
-    return {"gpu_dispatch": gpu_dispatch} if backend == "rawio" else {}
+def store_opts(backend: str, gpu_dispatch: bool, precision: str = "int8",
+               fused: bool = False) -> dict:
+    """Per-backend build options derived from the executor flags.
+
+    For the quant backend, ``precision`` picks the swap-unit bit-width
+    (int8 | int4) and ``fused`` turns eager dequant OFF: units come back as
+    QuantizedTensor leaves that linear layers stream through the fused
+    dequant-matmul kernel (non-matmul consumers dequantize at use)."""
+    if backend == "rawio":
+        return {"gpu_dispatch": gpu_dispatch}
+    if backend == "quant":
+        assert precision in ("int8", "int4"), precision
+        return {"bits": 4 if precision == "int4" else 8, "eager": not fused}
+    return {}
+
+
+def kernel_vmem_working_set(precision: str, dtype: str = "bfloat16",
+                            block_m: int = 256, block_n: int = 256,
+                            block_k: int = 512) -> int:
+    """Per-kernel VMEM working set of the weight-stream matmul at the
+    default tiling for a store precision (the figure SwapStats reports:
+    the fused path shrinks the weight window 2x int8 / 4x int4)."""
+    item = jnp.dtype(dtype).itemsize
+    w_bits = {"fp": None, "int8": 8, "int4": 4}[precision]
+    return vmem_bytes(block_m, block_n, block_k, item, w_bits=w_bits)
 
 
 class SwappedSequential:
@@ -154,18 +184,31 @@ class SwappedSequential:
                  gpu_dispatch: bool = False, prefetch_depth: int = 2,
                  ledger: Optional[MemoryLedger] = None,
                  cache: Optional[BlockCache] = None,
-                 store_backend: Optional[str] = None):
-        """named_units: [(name, params)]; apply_fn(i, params, x) -> x."""
+                 store_backend: Optional[str] = None,
+                 precision: str = "int8", fused: bool = False):
+        """named_units: [(name, params)]; apply_fn(i, params, x) -> x.
+
+        ``precision``/``fused`` apply to the quant backend only: fused=True
+        hands apply_fn QuantizedTensor weight leaves (stream through the
+        fused dequant-matmul via layers.linear, or materialize at use), so
+        apply_fn must be quantization-aware (vision.apply_layer is)."""
         self.named_units = list(named_units)
         self.apply_fn = apply_fn
         self.prefetch_depth = max(prefetch_depth, 1)
         self.store_backend = resolve_backend(store_backend, mode)
+        self.precision = precision if self.store_backend == "quant" else "fp"
+        self.fused = fused and self.store_backend == "quant"
         self.store = build_store(self.named_units, workdir,
                                  backend=self.store_backend,
-                                 **store_opts(self.store_backend, gpu_dispatch))
+                                 **store_opts(self.store_backend, gpu_dispatch,
+                                              precision, fused))
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
                                  gpu_dispatch=gpu_dispatch,
                                  ledger=ledger, cache=cache)
+        # the eager quant arm dequantizes BEFORE the matmul, so its kernel
+        # streams fp tiles: only the fused path earns the shrunken figure
+        self.engine.vmem_working_set = kernel_vmem_working_set(
+            self.precision if self.fused else "fp", "float32")
         self.plan: Optional[BlockPlan] = None
         self._block_fns: Dict[Tuple[int, int], Any] = {}
 
@@ -184,6 +227,10 @@ class SwappedSequential:
 
     def partition_with(self, infos, budget: int, dm: DelayModel,
                        delta: float = 0.05) -> BlockPlan:
+        # plan against RESIDENT unit costs: quantized swap units shrink the
+        # working set the budget must hold (rows align 1:1 with the units)
+        infos = resident_infos(infos, self.engine.store,
+                               [n for n, _ in self.named_units])
         planner = PartitionPlanner(infos, dm, m=self.prefetch_depth)
         self.plan, self.table = planner.best_partition(budget, delta)
         self.planner = planner
@@ -213,8 +260,11 @@ class SwappedSequential:
                    "overlap_efficiency": st.overlap_efficiency(),
                    "cache_hit_rate": st.cache_hit_rate(),
                    "store_backend": self.store_backend,
+                   "precision": self.precision,
                    "bytes_swapped": st.bytes_swapped,
-                   "bytes_logical": st.bytes_logical}
+                   "bytes_logical": st.bytes_logical,
+                   "bytes_resident_quantized": st.bytes_resident_quantized,
+                   "vmem_working_set": st.vmem_working_set}
 
     def close(self):
         self.engine.close()
@@ -229,7 +279,8 @@ class SwappedModel:
                  ledger: Optional[MemoryLedger] = None,
                  cache: Optional[BlockCache] = None,
                  name: Optional[str] = None,
-                 store_backend: Optional[str] = None):
+                 store_backend: Optional[str] = None,
+                 precision: Optional[str] = None):
         self.model = model
         self.cfg = model.cfg
         self.name = name or model.cfg.name
@@ -239,6 +290,15 @@ class SwappedModel:
             # per-model eligibility knob (configs): architectures whose
             # dynamics amplify weight error serve from the exact store
             self.store_backend = "mmap"
+        # precision axis: fp for exact stores; else the caller's override or
+        # the config's per-model swap precision (int8 | int4). Quant units
+        # stay quantized-RESIDENT (no eager dequant): 2-D MLP/head weights
+        # stream through the fused dequant-matmul, the rest dequantize at
+        # use (see kernels/qtensor.cast_unit_params).
+        if self.store_backend == "quant":
+            self.precision = precision or self.cfg.swap_precision
+        else:
+            self.precision = "fp"
         self.units = split_units(model, params)
         prefix = f"{name}/" if name else ""
         for u in self.units:            # namespace units per model so a
@@ -253,10 +313,13 @@ class SwappedModel:
             store_units.append((u.name, u.params))
         self.store = build_store(store_units, workdir,
                                  backend=self.store_backend,
-                                 **store_opts(self.store_backend, gpu_dispatch))
+                                 **store_opts(self.store_backend, gpu_dispatch,
+                                              self.precision, fused=True))
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
                                  gpu_dispatch=gpu_dispatch, pinned=pinned,
                                  ledger=ledger, cache=cache)
+        self.engine.vmem_working_set = kernel_vmem_working_set(
+            self.precision, self.cfg.dtype)
         self.plan: Optional[BlockPlan] = None
         self._jitted: Dict[str, Any] = {}
 
@@ -264,6 +327,10 @@ class SwappedModel:
     def partition(self, budget: int, dm: DelayModel, batch: int, seq: int,
                   delta: float = 0.05) -> BlockPlan:
         infos = unit_infos(self.model, self.units, batch, seq)
+        # block-plan search sees the RESIDENT working set: quantized units
+        # cost their payload, so the same budget packs more layers per block
+        infos = resident_infos(infos, self.engine.store,
+                               [u.name for u in self.units])
         planner = PartitionPlanner(infos, dm, m=self.prefetch_depth)
         self.plan, self.table = planner.best_partition(budget, delta)
         self.planner = planner
@@ -274,26 +341,35 @@ class SwappedModel:
                               m=self.prefetch_depth)
 
     # ------------------------------------------------------------ apply fns
+    def _head_logits(self, uparams: dict, h):
+        """Final-norm + lm_head projection; a quantized head streams through
+        the fused kernel (vocab projections are the odd-shaped case the
+        padded swap_linear grid now covers)."""
+        cfg = self.cfg
+        h = rms_norm(h, jnp.asarray(uparams["final_norm"]).astype(h.dtype),
+                     cfg.norm_eps, plus_one=cfg.post_norms)
+        w = uparams.get("lm_head")
+        if w is None:
+            raise ValueError("tied head needs the embed unit resident; "
+                             "SwappedModel stores lm_head explicitly")
+        if isinstance(w, QuantizedTensor):
+            logits = linear(h.astype(jnp.float32), w)
+        else:
+            logits = h.astype(jnp.float32) @ jnp.asarray(w, jnp.float32)
+        return softcap(logits, cfg.final_logit_softcap)
+
     def _apply_unit(self, unit: Unit, uparams: dict, x, positions, batch):
         cfg = self.cfg
         if unit.kind == "embed":
+            # embeddings are gather/frontend consumers: dequantize at use
             x, positions = self.model._embed(
-                jax.tree.map(jnp.asarray, uparams), batch, "prefill")
+                materialize_tree(uparams), batch, "prefill")
             return x, positions
         if unit.kind == "head":
-            h = rms_norm(x, jnp.asarray(uparams["final_norm"]).astype(x.dtype),
-                         cfg.norm_eps, plus_one=cfg.post_norms)
-            w = uparams.get("lm_head")
-            if w is None:
-                raise ValueError("tied head needs the embed unit resident; "
-                                 "SwappedModel stores lm_head explicitly")
-            logits = h.astype(jnp.float32) @ jnp.asarray(w, jnp.float32)
-            return softcap(logits, cfg.final_logit_softcap), positions
+            return self._head_logits(uparams, x), positions
         kind = "dense" if unit.kind == "shared_attn" else unit.kind
         is_local = cfg.is_local_layer(unit.layer_id)
-        p = jax.tree.map(lambda a: jnp.asarray(a).astype(jnp.dtype(cfg.dtype))
-                         if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating)
-                         else jnp.asarray(a), uparams)
+        p = cast_unit_params(uparams, jnp.dtype(cfg.dtype))
         x, _, _ = apply_layer(cfg, kind, p, x, positions, is_local,
                               None, None, "prefill")
         return x, positions
@@ -360,19 +436,12 @@ class SwappedModel:
                         unit = self.units[ui]
                         if unit.kind == "embed":
                             x, positions = self.model._embed(
-                                jax.tree.map(jnp.asarray, p), batch, "decode")
+                                materialize_tree(p), batch, "decode")
                         elif unit.kind == "head":
-                            h = rms_norm(x, jnp.asarray(p["final_norm"]).astype(x.dtype),
-                                         cfg.norm_eps, plus_one=cfg.post_norms)
-                            last_logits = softcap(
-                                h.astype(jnp.float32) @ jnp.asarray(p["lm_head"], jnp.float32),
-                                cfg.final_logit_softcap)
+                            last_logits = self._head_logits(p, x)
                         else:
                             kind = "dense" if unit.kind == "shared_attn" else unit.kind
-                            pc = jax.tree.map(
-                                lambda a: jnp.asarray(a).astype(jnp.dtype(cfg.dtype))
-                                if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating)
-                                else jnp.asarray(a), p)
+                            pc = cast_unit_params(p, jnp.dtype(cfg.dtype))
                             x, caches[ui], _ = apply_layer(
                                 cfg, kind, pc, x, positions,
                                 cfg.is_local_layer(unit.layer_id),
@@ -423,8 +492,11 @@ class SwappedModel:
             "overlap_efficiency": st.overlap_efficiency(),
             "cache_hit_rate": st.cache_hit_rate(),
             "store_backend": self.store_backend,
+            "precision": self.precision,
             "bytes_swapped": st.bytes_swapped,
             "bytes_logical": st.bytes_logical,
+            "bytes_resident_quantized": st.bytes_resident_quantized,
+            "vmem_working_set": st.vmem_working_set,
         }
 
     def close(self):

@@ -263,6 +263,25 @@ class BlockHandle:
 
 @dataclass
 class SwapStats:
+    """Wall-clock + byte accounting of one engine. The three byte currencies
+    the ledger report distinguishes:
+
+      * ``bytes_logical``            — LOGICAL (dequantized) bytes the
+                                       swap-ins delivered;
+      * ``bytes_swapped``            — STREAMED: actual storage->host I/O
+                                       traffic (quantized backends move
+                                       4-8x less than logical);
+      * ``bytes_resident_quantized`` — RESIDENT-quantized: payload bytes
+                                       delivered still in quantized form
+                                       (``QuantizedTensor`` leaves, the
+                                       fused path) — these stay quantized
+                                       in device memory and in the VMEM
+                                       weight stream.
+
+    ``vmem_working_set`` is the per-kernel figure: bytes the weight-stream
+    matmul holds in VMEM at the default tiling for this engine's store
+    precision (set by the runtime from ``kernels.swap_linear.vmem_bytes``;
+    the fused path shrinks the weight window 2x int8 / 4x int4)."""
     t_in: List[float] = field(default_factory=list)
     t_in_io: List[float] = field(default_factory=list)
     t_in_asm: List[float] = field(default_factory=list)
@@ -272,6 +291,8 @@ class SwapStats:
     peak_resident: int = 0
     bytes_swapped: int = 0       # actual storage->host I/O traffic
     bytes_logical: int = 0       # dequantized bytes those swap-ins delivered
+    bytes_resident_quantized: int = 0   # delivered still-quantized (fused)
+    vmem_working_set: int = 0    # per-kernel VMEM bytes at this precision
     cache_hits: int = 0
     cache_misses: int = 0
 
@@ -311,6 +332,10 @@ class SwapEngine:
         self.cache = cache if cache is not None else BlockCache(0, self.ledger)
         self.cache.pin(pinned)
         self.stats = SwapStats()
+        # per-kernel VMEM working set of the weight-stream matmul at this
+        # store's precision; the runtime sets it (kernels.vmem_bytes) and
+        # swap_in republishes it into stats so resets don't lose it
+        self.vmem_working_set = 0
         self._loader = ThreadPoolExecutor(max_workers=1,
                                           thread_name_prefix="swapnet-loader")
 
@@ -359,6 +384,7 @@ class SwapEngine:
                 asm_s += r.asm_s
                 loaded += r.io_bytes
                 self.stats.bytes_logical += n
+                self.stats.bytes_resident_quantized += r.quantized_bytes
                 self.stats.cache_misses += 1
                 # admission reasons in the unit's RESIDENT cost — exactly
                 # what the cache entry will charge the ledger (2-3x logical
@@ -390,6 +416,7 @@ class SwapEngine:
         self.stats.t_in.append(io_s + asm_s)
         self.stats.t_in_io.append(io_s)
         self.stats.t_in_asm.append(asm_s)
+        self.stats.vmem_working_set = self.vmem_working_set
         self.stats.bytes_swapped += loaded   # actual I/O traffic: cache hits
         return handle                        # skip it, admitted loads count
 

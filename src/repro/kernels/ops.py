@@ -17,6 +17,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.dequant import dequant_int8 as _dequant_int8
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.swap_linear import swap_linear as _swap_linear
+from repro.kernels.swap_linear_q import swap_linear_q as _swap_linear_q
 
 
 def _on_tpu() -> bool:
@@ -35,6 +36,20 @@ def swap_linear(x, w, b=None, *, act: str = "none",
             return _swap_linear(x, w, b, act=act, interpret=False)
         return _ref.swap_linear_ref(x, w, b, act=act)
     return _swap_linear(x, w, b, act=act, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "act", "interpret"))
+def swap_linear_q(x, qw, scales, b=None, *, bits: int = 8,
+                  act: str = "none", interpret: Optional[bool] = None):
+    """Fused dequant-matmul weight stream (int8 / packed int4);
+    interpret=None -> auto (TPU real, CPU ref)."""
+    if interpret is None:
+        if _on_tpu():
+            return _swap_linear_q(x, qw, scales, b, bits=bits, act=act,
+                                  interpret=False)
+        return _ref.swap_linear_q_ref(x, qw, scales, b, act=act, bits=bits)
+    return _swap_linear_q(x, qw, scales, b, bits=bits, act=act,
+                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))

@@ -26,6 +26,36 @@ def dequant_int8_ref(values: jax.Array, scales: jax.Array,
             * scales.astype(jnp.float32)[None, :]).astype(out_dtype)
 
 
+def unpack_int4_ref(carrier: jax.Array, rows: int) -> jax.Array:
+    """Traceable inverse of dequant.pack_int4: [Rp, C] int8 carrier ->
+    [rows, C] sign-extended values (even row = low nibble, odd = high)."""
+    qi = carrier.astype(jnp.int32)
+    low = jnp.right_shift(jnp.left_shift(qi, 28), 28)   # sign-extend nibble
+    high = jnp.right_shift(qi, 4)                       # arithmetic shift
+    out = jnp.stack([low, high], axis=1).reshape(2 * carrier.shape[0],
+                                                 carrier.shape[1])
+    return out[:rows].astype(jnp.int8)
+
+
+def swap_linear_q_ref(x: jax.Array, qw: jax.Array, scales: jax.Array,
+                      b: Optional[jax.Array] = None, act: str = "none",
+                      bits: int = 8) -> jax.Array:
+    """Oracle for the fused dequant-matmul: dequantize the whole weight,
+    then the plain swap_linear math. qw is [K, N] int8 (bits=8) or the
+    [ceil(K/2), N] packed carrier (bits=4); scales is [N] fp32."""
+    K = x.shape[-1]
+    vals = unpack_int4_ref(qw, K) if bits == 4 else qw
+    w = vals.astype(jnp.float32) * scales.astype(jnp.float32)[None, :]
+    r = jnp.dot(x.astype(jnp.float32), w)
+    if b is not None:
+        r = r + b.astype(jnp.float32)
+    if act == "silu":
+        r = r * jax.nn.sigmoid(r)
+    elif act == "gelu":
+        r = jax.nn.gelu(r, approximate=True)
+    return r.astype(x.dtype)
+
+
 def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
              u: jax.Array) -> jax.Array:
     """Literal per-step WKV6 recurrence. r,k,v,w_log: [BH,S,hd]; u: [BH,hd]."""

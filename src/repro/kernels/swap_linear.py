@@ -7,10 +7,20 @@ HBM->VMEM DMA for tile (k+1) while the MXU consumes tile k — exactly the
 paper's "swap-in of block i+1 overlaps execution of block i" (m = 2), with
 hardware DMA as the dedicated swap channel and no intermediate copies.
 
-VMEM working set (the "memory budget b"):
-    2 * (bm*bk + bk*bn + bn) * itemsize   (double-buffered inputs)
-    + bm*bn*4                             (fp32 accumulator scratch)
-Block shapes default to MXU-aligned multiples of 128.
+VMEM working set (the "memory budget b", see :func:`vmem_bytes`):
+    2 * (bm*bk*itemsize + bk*bn*w_bits/8 + bn*itemsize)   (double-buffered
+                                                           inputs; the weight
+                                                           window streams at
+                                                           w_bits per element)
+    + bm*bn*4                                             (fp32 accumulator)
+    + 2*bn*4 when w_bits < fp                             (per-channel scales)
+For the fp path here w_bits == 8*itemsize; the fused quantized path
+(kernels/swap_linear_q.py) streams the SAME grid at w_bits = 8 (int8) or 4
+(packed int4), shrinking the weight window 2x / 4x vs bf16 and moving only
+quantized bytes HBM->VMEM. Block shapes default to MXU-aligned multiples of
+128. Shapes that do not divide the block sizes are zero-padded up to the
+next multiple and the output is sliced back — odd-shaped heads (vocab
+projections) take the streamed path instead of falling back to dense.
 """
 from __future__ import annotations
 
@@ -43,21 +53,41 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, act: str):
         o_ref[...] = r.astype(o_ref.dtype)
 
 
+def pad_up(n: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` >= n."""
+    return -(-n // mult) * mult
+
+
+def _pad2(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-D array up to [rows, cols] (no-op when already there)."""
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr or pc:
+        a = jnp.pad(a, ((0, pr), (0, pc)))
+    return a
+
+
 def swap_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
                 *, act: str = "none", block_m: int = 256, block_n: int = 256,
                 block_k: int = 512, interpret: bool = False) -> jax.Array:
-    """y = act(x @ w + b). x [M,K], w [K,N] (streamed), b [N] or None."""
+    """y = act(x @ w + b). x [M,K], w [K,N] (streamed), b [N] or None.
+
+    M/N/K need not divide the block sizes: inputs are zero-padded up to the
+    next block multiple and the [M, N] output sliced back out (zero K-columns
+    contribute nothing to the k-sum; padded M rows / N cols are discarded).
+    """
     M, K = x.shape
     K2, N = w.shape
     assert K == K2, (x.shape, w.shape)
     bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
-        f"shapes ({M},{K},{N}) not divisible by blocks ({bm},{bk},{bn})"
+    Mp, Np, Kp = pad_up(M, bm), pad_up(N, bn), pad_up(K, bk)
     if b is None:
         b = jnp.zeros((N,), x.dtype)
-    n_m, n_n, n_k = M // bm, N // bn, K // bk
+    x = _pad2(x, Mp, Kp)
+    w = _pad2(w, Kp, Np)
+    b = _pad2(b.reshape(1, N), 1, Np)
+    n_m, n_n, n_k = Mp // bm, Np // bn, Kp // bk
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k, act=act),
         grid=(n_m, n_n, n_k),
         in_specs=[
@@ -66,12 +96,48 @@ def swap_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # bias
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, w, b.reshape(1, N))
+    )(x, w, b)
+    return out[:M, :N] if (Mp, Np) != (M, N) else out
 
 
-def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 2) -> int:
-    """The VMEM budget this tiling claims (for kernel-level roofline notes)."""
-    return 2 * (bm * bk + bk * bn + bn) * itemsize + bm * bn * 4
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 2,
+               w_bits: Optional[int] = None) -> int:
+    """The VMEM budget a (bm, bn, bk) tiling claims (roofline notes).
+
+    ``w_bits`` is the bit-width of the streamed weight elements: default
+    ``8 * itemsize`` (an fp stream at the activation itemsize, the plain
+    swap_linear path); 8 for int8 units, 4 for packed int4 — the fused
+    swap_linear_q path, whose double-buffered weight window shrinks
+    accordingly and adds one (1, bn) fp32 scales row per buffer.
+    """
+    if w_bits is None:
+        w_bits = 8 * itemsize
+    w_bytes = bk * bn * w_bits // 8
+    scales = 2 * bn * 4 if w_bits < 8 * itemsize else 0
+    return (2 * (bm * bk * itemsize + w_bytes + bn * itemsize)
+            + scales + bm * bn * 4)
+
+
+def weight_stream_bytes(M: int, K: int, N: int, *, block_m: int = 256,
+                        block_n: int = 256, block_k: int = 512,
+                        w_bits: int = 16) -> int:
+    """HBM->VMEM weight-stream traffic of one swap_linear/_q call.
+
+    Every (bk, bn) weight tile is DMA'd once per M-row block, so the stream
+    moves ``ceil(M/bm) * Kp * Np * w_bits/8`` bytes (padded shapes);
+    quantized streams add one (1, bn) fp32 scales row per (j, k) tile visit.
+    This is the per-kernel figure the fused path shrinks 2x (int8) to 4x
+    (int4) vs a bf16 stream at equal tile shapes.
+    """
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    if w_bits == 4:
+        bk = max(2, bk - (bk % 2))
+    Mp, Np, Kp = pad_up(M, bm), pad_up(N, bn), pad_up(K, bk)
+    n_m = Mp // bm
+    total = n_m * Kp * Np * w_bits // 8
+    if w_bits in (4, 8):
+        total += n_m * (Np // bn) * (Kp // bk) * bn * 4     # scales tiles
+    return total

@@ -1,0 +1,117 @@
+"""swap_linear_q: fused dequant-matmul weight streaming (ROADMAP item (f)).
+
+The quant store's swap-in used to dequantize a unit to fp BEFORE the
+weight-streaming matmul ran, so the HBM->VMEM DMA and the double-buffered
+VMEM weight window still paid full precision. This kernel moves the dequant
+INSIDE the k-loop: the streamed weight tile stays int8 (or int4, packed
+two-per-byte into an int8 carrier), each (bk, bn) tile is unpacked /
+sign-extended in registers as the MXU consumes it, and the per-channel
+scales are applied ONCE to the fp32 accumulator at flush — ``s_n`` factors
+out of the k-sum, so the hot loop is a plain integer-valued matmul. The
+weight window therefore shrinks 2x (int8) / 4x (int4) vs a bf16 stream and
+the DMA moves only quantized bytes (see swap_linear.vmem_bytes /
+weight_stream_bytes with ``w_bits``).
+
+int4 carrier layout (kernels/dequant.pack_int4, bit-exact contract): row
+pair (2r, 2r+1) of the logical [K, N] weight shares carrier row r — even
+row in the low nibble, odd row in the high nibble, two's-complement
+sign-extended on unpack. Because packing pairs ADJACENT rows, a
+(bk/2, bn) carrier tile at grid row k covers exactly logical rows
+[k*bk, (k+1)*bk): tiles unpack independently (bk is forced even).
+
+Error contract (asserted in tests/test_fused_quant.py): the output matches
+``swap_linear(dequant(qw))`` up to fp accumulation order — both use an fp32
+accumulator; this kernel applies the scale once at flush instead of per
+element — i.e. allclose at ~1e-5 for fp32 activations, ~2e-2 for bf16. The
+quantization error itself is the store's documented bound vs the original
+weight: ``|ŵ - w| <= max|w[:, c]| / 254`` (int8) or ``/ 14`` (int4) per
+channel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import unpack_int4_ref
+from repro.kernels.swap_linear import _pad2, pad_up
+
+
+def _qkernel(x_ref, qw_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+             act: str, bits: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if bits == 4:       # (bk/2, bn) carrier -> (bk, bn), shared unpacker
+        q = qw_ref[...]
+        w = unpack_int4_ref(q, 2 * q.shape[0])
+    else:
+        w = qw_ref[...]
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                            w.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        # per-channel scale factors out of the k-sum: applied once here
+        r = (acc_ref[...] * s_ref[...].astype(jnp.float32)
+             + b_ref[...].astype(jnp.float32))
+        if act == "silu":
+            r = r * jax.nn.sigmoid(r)
+        elif act == "gelu":
+            r = jax.nn.gelu(r, approximate=True)
+        o_ref[...] = r.astype(o_ref.dtype)
+
+
+def swap_linear_q(x: jax.Array, qw: jax.Array, scales: jax.Array,
+                  b: Optional[jax.Array] = None, *, bits: int = 8,
+                  act: str = "none", block_m: int = 256, block_n: int = 256,
+                  block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """y = act(x @ (qw * scales) + b), dequantized inside the k-loop.
+
+    x [M, K]; qw [K, N] int8 values (bits=8) or the [ceil(K/2), N] packed
+    int8 carrier (bits=4); scales [N] fp32 per output channel. Shapes pad up
+    to block multiples like swap_linear (zero carrier bytes unpack to zero
+    weights, so padded K-rows contribute nothing).
+    """
+    assert bits in (8, 4), bits
+    M, K = x.shape
+    pack = 2 if bits == 4 else 1
+    Kq, N = qw.shape
+    assert Kq == -(-K // pack), (x.shape, qw.shape, bits)
+    assert scales.shape == (N,), (scales.shape, N)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    if bits == 4:
+        bk = max(2, bk - (bk % 2))      # carrier tiles need even bk
+    Mp, Np, Kp = pad_up(M, bm), pad_up(N, bn), pad_up(K, bk)
+    if b is None:
+        b = jnp.zeros((N,), x.dtype)
+    x = _pad2(x, Mp, Kp)
+    qw = _pad2(qw, Kp // pack, Np)
+    s = _pad2(scales.reshape(1, N).astype(jnp.float32), 1, Np)
+    b = _pad2(b.reshape(1, N), 1, Np)
+    n_m, n_n, n_k = Mp // bm, Np // bn, Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_qkernel, n_k=n_k, act=act, bits=bits),
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),        # acts
+            pl.BlockSpec((bk // pack, bn),
+                         lambda i, j, k: (k, j)),                  # q stream
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),         # scales
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),         # bias
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, qw, s, b)
+    return out[:M, :N] if (Mp, Np) != (M, N) else out

@@ -9,6 +9,10 @@ weight budget (blocks streamed through memory during inference).
         --reduce smoke --budget-mb 48 --rounds 3   # shared-budget multi-tenant
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduce smoke \
         --budget-mb 16 --store quant   # int8 swap units, ~4x less swap-in I/O
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduce smoke \
+        --budget-mb 16 --store quant --precision int4   # packed int4 units:
+        # ~8x less swap-in I/O, quantized-resident weights stream through
+        # the fused dequant-matmul kernel (swap_linear_q)
 """
 from __future__ import annotations
 
@@ -42,7 +46,8 @@ def serve_multi(args) -> None:
     with tempfile.TemporaryDirectory() as d:
         rt = MultiModelRuntime(budget, prefetch_depth=args.prefetch_depth,
                                cache_frac=args.cache_frac,
-                               store_backend=args.store)
+                               store_backend=args.store,
+                               precision=args.precision)
         refs = {}
         for i, arch in enumerate(archs):
             cfg = scale_config(get_arch(arch), args.reduce)
@@ -108,7 +113,7 @@ def serve_multi(args) -> None:
           f"({st['cache_hits']} hits / {st['cache_misses']} misses)", flush=True)
     for name, ms in st["models"].items():
         print(f"[serve-multi]   {name}: blocks={ms['n_blocks']} m={ms['m']} "
-              f"store={ms['store_backend']} "
+              f"store={ms['store_backend']}/{ms['precision']} "
               f"overlap_eff={ms['overlap_efficiency']*100:.1f}% "
               f"swapped {ms['bytes_swapped_mb']:.1f} MB "
               f"({ms['bytes_logical_mb']:.1f} MB logical)", flush=True)
@@ -138,9 +143,16 @@ def main() -> None:
     ap.add_argument("--store", default="mmap",
                     choices=["mmap", "rawio", "quant"],
                     help="block-store backend: mmap (zero-copy, lossless), "
-                         "rawio (read()-based ablation arm), quant (int8 "
-                         "per-channel swap units + on-device dequant, ~4x "
-                         "less swap-in I/O, bounded error)")
+                         "rawio (read()-based ablation arm), quant (per-"
+                         "channel quantized swap units kept quantized-"
+                         "resident: 2-D matmul weights stream through the "
+                         "fused dequant-matmul kernel, 4-8x less swap-in "
+                         "I/O, bounded error)")
+    ap.add_argument("--precision", default=None, choices=["int8", "int4"],
+                    help="quant-store unit precision override (default: the "
+                         "arch config's swap_precision; int4 packs two "
+                         "weights per byte — half the swap bytes of int8 "
+                         "at a max|w[:,c]|/14 per-channel error bound)")
     args = ap.parse_args()
 
     if args.multi:
@@ -163,7 +175,8 @@ def main() -> None:
         with tempfile.TemporaryDirectory() as d:
             sm = SwappedModel(model, params, d, mode="snet", budget=None,
                               prefetch_depth=args.prefetch_depth,
-                              store_backend=args.store)
+                              store_backend=args.store,
+                              precision=args.precision)
             sm.partition(budget, DelayModel(), args.requests, args.prompt_len)
             batch = {"tokens": jax.numpy.asarray(
                 rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len)),
@@ -176,9 +189,13 @@ def main() -> None:
               f"peak resident {stats['peak_resident_mb']:.1f} MB "
               f"(budget {args.budget_mb} MB), "
               f"blocks={sm.plan.n_blocks}, "
-              f"store={stats['store_backend']}, "
+              f"store={stats['store_backend']}"
+              f"/{stats['precision']}, "
               f"swapped {stats['bytes_swapped']/1e6:.1f} MB "
-              f"({stats['bytes_logical']/1e6:.1f} MB logical), "
+              f"({stats['bytes_logical']/1e6:.1f} MB logical, "
+              f"{stats['bytes_resident_quantized']/1e6:.1f} MB "
+              f"quantized-resident), "
+              f"kernel VMEM {stats['vmem_working_set']/1e6:.2f} MB, "
               f"overlap_eff={stats['overlap_efficiency']*100:.1f}%", flush=True)
         return
 

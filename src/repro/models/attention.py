@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ParamDef
-from repro.models.layers import apply_rope, rope_angles, softcap
+from repro.models.layers import apply_rope, linear, rope_angles, softcap
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 LARGE_WINDOW = 1 << 30
@@ -214,9 +214,9 @@ def gqa_apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     Decode: cache={'k','v'} of [B,Smax,KV,hd], decode_pos [B] write index."""
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q = (x @ p["wq"] + p.get("bq", 0)).reshape(B, S, H, hd)
-    k = (x @ p["wk"] + p.get("bk", 0)).reshape(B, S, KV, hd)
-    v = (x @ p["wv"] + p.get("bv", 0)).reshape(B, S, KV, hd)
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, S, KV, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, S, KV, hd)
 
     if cfg.rope_type != "none":
         sections = cfg.mrope_sections if cfg.rope_type == "mrope" else None
@@ -258,7 +258,7 @@ def gqa_apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
         out, cache = _windowed_decode(q, cache, k, v, decode_pos,
                                       scale=_attn_scale(cfg),
                                       logit_cap=cfg.attn_logit_softcap)
-        out = out.reshape(B, S, H * hd).astype(x.dtype) @ p["wo"]
+        out = linear(out.reshape(B, S, H * hd).astype(x.dtype), p["wo"])
         return out, cache
     if cache is not None and decode_pos is not None:
         if SHARDED_DECODE_AXIS is not None:
@@ -274,7 +274,7 @@ def gqa_apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
                     axis=SHARDED_DECODE_AXIS, batch_axes=("pod", "data"),
                     scale=_attn_scale(cfg), window=w,
                     logit_cap=cfg.attn_logit_softcap, block_local=bl)
-                out = out.reshape(B, S, H * hd).astype(x.dtype) @ p["wo"]
+                out = linear(out.reshape(B, S, H * hd).astype(x.dtype), p["wo"])
                 return out, {"k": ck, "v": cv}
         # single-token decode: write k/v at decode_pos, attend over the cache
         upd = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
@@ -290,7 +290,7 @@ def gqa_apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
                            window=window, scale=_attn_scale(cfg),
                            logit_cap=cfg.attn_logit_softcap, chunk=chunk,
                            block_local=block_local)
-    out = out.reshape(B, S, H * hd).astype(x.dtype) @ p["wo"]
+    out = linear(out.reshape(B, S, H * hd).astype(x.dtype), p["wo"])
     # NOTE (§Perf iteration B3, REFUTED): constraining the attention output
     # back to batch-only sharding here was hypothesized to stop the shared
     # expert's D-contraction all-reduces, but measured 2331 GB of collectives
@@ -354,7 +354,7 @@ def mla_apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     nd, rd, vd, r = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, m.kv_lora_rank
     scale = (nd + rd) ** -0.5
 
-    q = (x @ p["wq"]).reshape(B, S, H, nd + rd)
+    q = linear(x, p["wq"]).reshape(B, S, H, nd + rd)
     q_nope, q_rope = q[..., :nd], q[..., nd:]
     c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)    # [B,S,r]
     k_rope = (x @ p["w_krope"]).reshape(B, S, 1, rd)
@@ -381,7 +381,7 @@ def mla_apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
             logit_cap=None, chunk=chunk)                            # [B,1,H,r]
         w_uv = p["w_uv"].reshape(r, H, vd)
         out = jnp.einsum("bshr,rhv->bshv", out_lat, w_uv)
-        out = out.reshape(B, S, H * vd).astype(x.dtype) @ p["wo"]
+        out = linear(out.reshape(B, S, H * vd).astype(x.dtype), p["wo"])
         return out, cache
 
     # train / prefill: materialize k, v from latents for this block
@@ -392,5 +392,5 @@ def mla_apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     # pad v to qk dim for the shared kernel? no — online_attention is dim-agnostic
     out = online_attention(qf, k, v, positions, None, causal=not cfg.is_encoder,
                            window=None, scale=scale, logit_cap=None, chunk=chunk)
-    out = out.reshape(B, S, H * vd).astype(x.dtype) @ p["wo"]
+    out = linear(out.reshape(B, S, H * vd).astype(x.dtype), p["wo"])
     return out, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}

@@ -1,4 +1,12 @@
-"""Shared layer primitives: norms, RoPE / M-RoPE, MLPs."""
+"""Shared layer primitives: norms, RoPE / M-RoPE, MLPs.
+
+:func:`linear` is the precision routing point of the swap path: when a
+weight arrives as a :class:`~repro.kernels.qtensor.QuantizedTensor` (the
+quant store's fused/lazy mode), the matmul streams the quantized tiles
+through the fused dequant-matmul kernel — fp for that weight never exists
+in device memory. Plain arrays take the exact jnp path, bit-identical to
+the seed.
+"""
 from __future__ import annotations
 
 from typing import Optional, Tuple
@@ -8,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ParamDef
+from repro.kernels.qtensor import QuantizedTensor
 
 
 def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
@@ -59,6 +68,34 @@ def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
                             x1 * sin + x2 * cos], axis=-1).astype(dt)
 
 
+# ------------------------------------------------------------------ linear
+def linear(x: jax.Array, w, b: Optional[jax.Array] = None,
+           act: str = "none") -> jax.Array:
+    """y = act(x @ w + b), routed by weight representation.
+
+    QuantizedTensor w -> the fused dequant-matmul (``swap_linear_q``): int8
+    or packed-int4 tiles are dequantized inside the weight-stream k-loop,
+    bias and activation fused at the fp32 flush. Array w -> the plain jnp
+    ops the seed used (kept verbatim so exact-store paths stay
+    bit-identical). Leading x axes beyond the last are flattened for the
+    kernel and restored after.
+    """
+    if isinstance(w, QuantizedTensor):
+        from repro.kernels.ops import swap_linear_q
+        lead = x.shape[:-1]
+        y = swap_linear_q(x.reshape(-1, x.shape[-1]), w.q, w.scales, b,
+                          bits=w.bits, act=act)
+        return y.reshape(*lead, y.shape[-1])
+    r = x @ w
+    if b is not None:
+        r = r + b
+    if act == "silu":
+        r = jax.nn.silu(r)
+    elif act == "gelu":
+        r = jax.nn.gelu(r, approximate=True)
+    return r
+
+
 # ------------------------------------------------------------------ MLP
 def mlp_defs(cfg: ModelConfig, d_in: int, d_hidden: int) -> dict:
     if cfg.act in ("swiglu", "gelu_glu"):
@@ -75,15 +112,15 @@ def mlp_defs(cfg: ModelConfig, d_in: int, d_hidden: int) -> dict:
 
 def mlp_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
     if cfg.act in ("swiglu", "gelu_glu"):
-        gate = x @ p["wi0"]
-        gate = jax.nn.silu(gate) if cfg.act == "swiglu" else jax.nn.gelu(gate, approximate=True)
-        return (gate * (x @ p["wi1"])) @ p["wo"]
-    h = x @ p["wi"]
+        gate = linear(x, p["wi0"],
+                      act="silu" if cfg.act == "swiglu" else "gelu")
+        return linear(gate * linear(x, p["wi1"]), p["wo"])
+    h = linear(x, p["wi"])
     if cfg.act == "relu_sq":
         h = jnp.square(jax.nn.relu(h))
     else:
         h = jax.nn.gelu(h, approximate=True)
-    return h @ p["wo"]
+    return linear(h, p["wo"])
 
 
 def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:

@@ -89,6 +89,11 @@ def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.A
     y = jnp.zeros((T, D), x.dtype).at[s_tok].add(contrib.astype(x.dtype))
 
     if e.n_shared:
+        # shared experts are dense 2-D matmuls: routed through linear() so
+        # quantized-resident weights stream through the fused kernel (the
+        # 3-D routed stacks above are einsum consumers — dequant fallback)
+        from repro.models.layers import linear
         sp = p["shared"]
-        y = y + (jax.nn.silu(xf @ sp["wi0"]) * (xf @ sp["wi1"])) @ sp["wo"]
+        y = y + linear(linear(xf, sp["wi0"], act="silu")
+                       * linear(xf, sp["wi1"]), sp["wo"])
     return y.reshape(B, S, D), aux

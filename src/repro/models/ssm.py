@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import ParamDef
-from repro.models.layers import rms_norm
+from repro.models.layers import linear, rms_norm
 
 # rwkv6: per-step log-decay clamped to [W_LOG_MIN, W_LOG_MAX]; with chunk
 # size Q, |cumulative| <= Q*|W_LOG_MIN| must stay < log(float32 max) ~ 88.
@@ -142,7 +142,7 @@ def mamba2_chunked(cfg: ModelConfig, p: dict, x: jax.Array,
     y = (y.astype(jnp.float32)
          + xs.astype(jnp.float32) * p["D_skip"][:, None]).reshape(B, S, d_inner)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_y"], cfg.norm_eps)
-    return (y.astype(x.dtype) @ p["wo"]), (h_final, new_conv)
+    return linear(y.astype(x.dtype), p["wo"]), (h_final, new_conv)
 
 
 def mamba2_step(cfg: ModelConfig, p: dict, x: jax.Array,
@@ -161,7 +161,7 @@ def mamba2_step(cfg: ModelConfig, p: dict, x: jax.Array,
     y = jnp.einsum("bnhd,bd->bnh", h, Cq) + xq * p["D_skip"][:, None]
     y = y.reshape(B, 1, d_inner)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_y"], cfg.norm_eps)
-    return (y.astype(x.dtype) @ p["wo"]), (h, new_conv)
+    return linear(y.astype(x.dtype), p["wo"]), (h, new_conv)
 
 
 # ==========================================================================
@@ -273,7 +273,7 @@ def rwkv6_time_mix_chunked(cfg: ModelConfig, p: dict, xn: jax.Array,
     y = y.swapaxes(0, 1).reshape(B, S, D)
     from repro.models.layers import layer_norm
     y = layer_norm(y, p["ln_x_w"], p["ln_x_b"], eps=1e-5)
-    out = (y.astype(xn.dtype) * g) @ p["wo"]
+    out = linear(y.astype(xn.dtype) * g, p["wo"])
     return out, (S_fin, shift_out)
 
 
@@ -290,7 +290,7 @@ def rwkv6_time_mix_step(cfg: ModelConfig, p: dict, xn: jax.Array,
     y = y.reshape(B, 1, cfg.d_model)
     from repro.models.layers import layer_norm
     y = layer_norm(y, p["ln_x_w"], p["ln_x_b"], eps=1e-5)
-    out = (y.astype(xn.dtype) * g) @ p["wo"]
+    out = linear(y.astype(xn.dtype) * g, p["wo"])
     return out, (S_new, shift_out)
 
 

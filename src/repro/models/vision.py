@@ -16,6 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.qtensor import materialize
+from repro.models.layers import linear
+
 
 @dataclass(frozen=True)
 class Layer:
@@ -99,8 +102,10 @@ def init_convnet(layers: Sequence[Layer], key) -> List[dict]:
 
 
 def _conv(x, w, b, stride):
+    # conv weights are HWIO einsum-style consumers: quantized-resident
+    # units dequantize on device at use (the fused path covers fc below)
     y = jax.lax.conv_general_dilated(
-        x, w, (stride, stride), "SAME",
+        x, materialize(w), (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     return y + b
 
@@ -116,7 +121,7 @@ def apply_layer(l: Layer, p: dict, x: jax.Array) -> jax.Array:
     if l.kind == "gap":
         return jnp.mean(x, axis=(1, 2))
     if l.kind == "fc":
-        return x @ p["w"] + p["b"]
+        return linear(x, p["w"], p["b"])
     raise ValueError(l.kind)
 
 

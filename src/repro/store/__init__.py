@@ -6,8 +6,11 @@ Pick a backend by name::
     engine = SwapEngine(store)
 
 Backends: ``mmap`` (zero-copy, the paper's full system), ``rawio`` (read()-
-based, the copy_in ablation arm), ``quant`` (int8 per-channel swap units +
-Pallas dequant-on-swap-in). See base.py for the BlockStore contract.
+based, the copy_in ablation arm), ``quant`` (per-channel quantized swap
+units: ``bits=8`` int8 or ``bits=4`` packed int4; ``eager=False`` keeps
+units quantized-RESIDENT as QuantizedTensor leaves for the fused
+dequant-matmul path instead of dequantizing at swap-in). See base.py for
+the BlockStore contract.
 """
 from __future__ import annotations
 

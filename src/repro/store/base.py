@@ -53,19 +53,25 @@ def escape_name(name: str) -> str:
 class UnitRead:
     """One unit's swap-in, as performed by a store backend.
 
-    ``params``       — assembled (device-transferred) parameter tree;
-    ``io_bytes``     — bytes actually moved storage -> host (what
-                       ``SwapStats.bytes_swapped`` accumulates; quantized
-                       backends move ~4x less than the logical unit size);
-    ``ledger_bytes`` — resident bytes to charge to the memory ledger
-                       (mode-induced extra copies included);
-    ``io_s/asm_s``   — the t_in split: fetch vs assembly wall-clock.
+    ``params``          — assembled (device-transferred) parameter tree;
+    ``io_bytes``        — bytes actually moved storage -> host (what
+                          ``SwapStats.bytes_swapped`` accumulates; quantized
+                          backends move 4-8x less than the logical unit
+                          size);
+    ``ledger_bytes``    — resident bytes to charge to the memory ledger
+                          (mode-induced extra copies included);
+    ``io_s/asm_s``      — the t_in split: fetch vs assembly wall-clock;
+    ``quantized_bytes`` — payload bytes delivered STILL QUANTIZED (as
+                          ``QuantizedTensor`` leaves, the fused-path
+                          residency; 0 for eager/raw backends) — what
+                          ``SwapStats.bytes_resident_quantized`` reports.
     """
     params: Any
     io_bytes: int
     ledger_bytes: int
     io_s: float = 0.0
     asm_s: float = 0.0
+    quantized_bytes: int = 0
 
 
 class BlockStore:

@@ -1,38 +1,50 @@
-"""QuantizedStore: int8 per-channel quantized swap units, dequant-on-swap-in.
+"""QuantizedStore: int8/int4 per-channel quantized swap units.
 
 The paper's LLM outlook (§ "insights for deploying LLMs") points at raw I/O
 bytes per block as the bottleneck once the redundant copies are gone. This
 backend attacks exactly that: at BUILD time every large float tensor of a
 unit is quantized to symmetric per-channel int8 (values + one fp32 scale per
-output channel), cutting the bytes a swap-in must move from storage to host
-~4x. At SWAP-IN the quantized payload is memmapped (zero host copies, like
-the snet path), transferred host->device still quantized, and reconstructed
-to fp32/bf16 ON DEVICE by the Pallas ``dequant_int8`` kernel — the dequant
-multiply rides the H2D transfer the swap-in pays anyway, so saved I/O bytes
-are pure profit on the critical path.
+output channel, ~4x fewer bytes than fp32) or packed int4 (two values per
+carrier byte, ~8x — ``bits=4``), cutting the bytes a swap-in must move from
+storage to host accordingly. At SWAP-IN the quantized payload is memmapped
+(zero host copies, like the snet path) and transferred host->device still
+quantized. What happens next is the ``eager`` knob:
+
+  * ``eager=True``  (default, the PR 2 behaviour): the fp tree is
+    reconstructed on device by the Pallas ``dequant_int8`` kernel (int4
+    unpacks first) — the dequant rides the H2D transfer the swap-in pays
+    anyway;
+  * ``eager=False`` (the FUSED path, ROADMAP (f)): quantized leaves come
+    back as :class:`~repro.kernels.qtensor.QuantizedTensor` — fp is NEVER
+    materialized for them. Linear consumers stream the quantized tiles
+    straight through the fused dequant-matmul (kernels/swap_linear_q.py),
+    so HBM->VMEM DMA and the VMEM weight window also shrink 2-4x; other
+    consumers dequantize per use. Residency is genuinely the quantized
+    payload, which is what the ledger charges — raising effective cache
+    capacity by the same factor.
 
 Accounting (tested contract):
   * ``io_bytes`` / ``SwapStats.bytes_swapped`` — the QUANTIZED payload size
     (what actually crossed the storage channel);
-  * ``ledger_bytes`` — also the quantized size. This is a MODELING
-    convention mirroring the paper's ledger, which budgets the target
-    device: a production quant runtime keeps the int8 payload resident and
-    dequantizes per use (ultimately fused into the matmul weight stream —
-    ROADMAP next step (f)), so the quantized payload is the unit's durable
-    residency. This repro DOES materialize the fp tree as the execution
-    artifact, so host memory transiently holds payload + fp together;
-    ``SwapStats.bytes_logical`` reports that fp side so nothing is hidden;
+  * ``ledger_bytes`` — also the quantized size. With ``eager=False`` this
+    is literal (the payload IS the resident unit); with ``eager=True`` it
+    remains the PR 2 modeling convention (the repro materializes the fp
+    tree as the execution artifact and reports that side as
+    ``SwapStats.bytes_logical`` so nothing is hidden);
+  * ``quantized_bytes`` — bytes delivered still-quantized (lazy mode only);
   * ``nbytes`` stays LOGICAL (dequantized) — partitioning and block-size
-    reasoning are unchanged.
+    reasoning are unchanged (the planner separately consults
+    ``resident_nbytes`` to see the smaller working set).
 
 What gets quantized: float leaves with ndim >= 2 and >= ``min_quant_size``
 elements (weight matrices, conv stacks). 1-D leaves (norm gains, biases) and
 small tensors are stored raw — they are bytes-cheap and accuracy-critical,
-so the round-trip error bound (``|x̂ - x| <= max|x[:, c]| / 254`` per
-channel, see kernels/dequant.py) applies only where it is well conditioned.
-Per-MODEL eligibility is a config knob (``ModelConfig.quant_eligible``):
-architectures whose recurrent dynamics amplify weight error opt out and fall
-back to the mmap backend.
+so the round-trip error bound (``|x̂ - x| <= max|x[:, c]| / 254`` at int8,
+``/ 14`` at int4; see kernels/dequant.py) applies only where it is well
+conditioned. Per-MODEL eligibility and precision are config knobs
+(``ModelConfig.quant_eligible`` / ``swap_precision``): architectures whose
+recurrent dynamics amplify weight error opt out and fall back to the mmap
+backend.
 """
 from __future__ import annotations
 
@@ -54,8 +66,10 @@ class QLeaf:
     """One leaf inside a unit's quantized payload file.
 
     ``scale_offset < 0`` marks a raw (unquantized) leaf; otherwise the leaf
-    is int8 [rows, cols] at ``offset`` with fp32 [cols] scales at
-    ``scale_offset``. ``dtype`` is the ORIGINAL dtype dequant restores."""
+    is quantized [rows, cols] (``rows`` = LOGICAL rows of the channel grid;
+    the int4 carrier holds ceil(rows/2) payload rows) at ``offset`` with
+    fp32 [cols] scales at ``scale_offset``. ``dtype`` is the ORIGINAL dtype
+    dequant restores."""
     offset: int
     nbytes: int
     shape: Tuple[int, ...]
@@ -74,17 +88,26 @@ class QuantMeta:
 class QuantizedStore(BlockStore):
     backend = "quant"
     raw_format = False
-    suffix = ".q8"
 
-    def __init__(self, workdir: str, min_quant_size: int = MIN_QUANT_SIZE):
+    def __init__(self, workdir: str, min_quant_size: int = MIN_QUANT_SIZE,
+                 bits: int = 8, eager: bool = True):
+        assert bits in (8, 4), bits
         super().__init__(workdir)
         self.min_quant_size = min_quant_size
+        self.bits = bits
+        self.eager = eager
+        self.suffix = ".q8" if bits == 8 else ".q4"
         self._qmeta: Dict[str, QuantMeta] = {}
+
+    @property
+    def precision(self) -> str:
+        return "int8" if self.bits == 8 else "int4"
 
     # ------------------------------------------------------------ build
     def _write_unit(self, name: str, params: dict) -> None:
         from repro.core.skeleton import ALIGN, skeleton_of
-        from repro.kernels.dequant import quantize_int8
+        from repro.kernels.dequant import quantize_int4, quantize_int8
+        quantize = quantize_int8 if self.bits == 8 else quantize_int4
         leaves = jax.tree.leaves(params)
         # logical skeleton (nbytes/meta) WITHOUT materializing the flat fp
         # buffer — the payload below is this store's only serialization
@@ -102,11 +125,12 @@ class QuantizedStore(BlockStore):
             arr = np.ascontiguousarray(np.asarray(leaf))
             if (arr.ndim >= 2 and arr.size >= self.min_quant_size
                     and jnp.issubdtype(jnp.dtype(arr.dtype), jnp.floating)):
-                q, scales = quantize_int8(arr)
+                q, scales = quantize(arr)
                 off = put(q.tobytes())
                 soff = put(scales.tobytes())
+                rows = int(np.prod(arr.shape[:-1]))
                 qleaves.append(QLeaf(off, q.nbytes, tuple(arr.shape),
-                                     str(arr.dtype), soff, *q.shape))
+                                     str(arr.dtype), soff, rows, q.shape[1]))
             else:
                 off = put(arr.tobytes())
                 qleaves.append(QLeaf(off, arr.nbytes, tuple(arr.shape),
@@ -118,6 +142,8 @@ class QuantizedStore(BlockStore):
     # ------------------------------------------------------------ read
     def read_unit(self, name: str) -> UnitRead:
         from repro.kernels.ops import dequant_int8
+        from repro.kernels.qtensor import QuantizedTensor
+        from repro.kernels.ref import unpack_int4_ref
         skel = self.skeletons[name]
         if skel.nbytes == 0:
             return self._empty_unit(name)
@@ -126,22 +152,30 @@ class QuantizedStore(BlockStore):
         buf = np.memmap(self._path(name), dtype=np.uint8, mode="r")
         t1 = time.perf_counter()
         leaves = []
+        qbytes = 0
         for ql in meta.leaves:
             dt = jnp.dtype(ql.dtype)
             if ql.scale_offset < 0:            # raw leaf: view + one DMA
                 view = buf[ql.offset:ql.offset + ql.nbytes].view(dt.type)
                 leaves.append(jnp.asarray(view.reshape(ql.shape)))
                 continue
-            # quantized leaf: transfer int8 payload + scales, dequant there
+            # quantized leaf: transfer the payload + scales, keep or dequant
             q = jnp.asarray(buf[ql.offset:ql.offset + ql.nbytes]
-                            .view(np.int8).reshape(ql.rows, ql.cols))
+                            .view(np.int8).reshape(-1, ql.cols))
             s = jnp.asarray(buf[ql.scale_offset:ql.scale_offset + 4 * ql.cols]
                             .view(np.float32))
-            leaves.append(dequant_int8(q, s, dt.type).reshape(ql.shape))
+            if not self.eager:                 # fused path: stay quantized
+                leaves.append(QuantizedTensor(q, s, ql.shape, ql.dtype,
+                                              self.bits))
+                qbytes += ql.nbytes + 4 * ql.cols
+                continue
+            vals = unpack_int4_ref(q, ql.rows) if self.bits == 4 else q
+            leaves.append(dequant_int8(vals, s, dt.type).reshape(ql.shape))
         tree = jax.tree.unflatten(skel.treedef, leaves)
         t2 = time.perf_counter()
         stored = meta.stored_nbytes
-        return UnitRead(tree, stored, stored, t1 - t0, t2 - t1)
+        return UnitRead(tree, stored, stored, t1 - t0, t2 - t1,
+                        quantized_bytes=qbytes)
 
     # ------------------------------------------------------------ sizes
     def stored_nbytes(self, name: str) -> int:
