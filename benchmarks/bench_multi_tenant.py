@@ -1,0 +1,180 @@
+"""Multi-tenant serving latency under mixed priorities: the serialized
+single-executor baseline vs the concurrent priority-aware scheduler
+(`core/serving_scheduler.py`).
+
+Workload: a burst of low-priority requests for every tenant, then
+high-urgency arrivals landing BEHIND them — the adversarial shape for a
+FIFO executor (the high-urgency request eats the whole backlog's latency)
+and the motivating case for urgency-weighted admission + block-boundary
+preemption. Reports p50/p99 per priority class for both arms, the ledger
+peak vs the budget (must never exceed), and the headline ratio
+``hi_p99_speedup`` = serialized hi-class p99 / scheduled hi-class p99.
+
+Standalone CLI for the CI smoke point::
+
+    python -m benchmarks.bench_multi_tenant --smoke
+    # -> results/BENCH_multi_tenant.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, emit
+from repro.configs import ARCHS
+from repro.core.multi_model import MultiModelRuntime
+from repro.core.serving_scheduler import ServingScheduler
+from repro.models.transformer import Model
+
+ARCH_SET = ("qwen2.5-3b", "gemma2-9b")
+PRIO_LO, PRIO_HI = 1.0, 8.0
+# tight enough that a concurrent (1/K-sliced) plan has SEVERAL blocks per
+# pass — preemption happens at block boundaries, so single-block plans
+# would make the preemptive arm degenerate to run-to-completion
+BUDGET = 10 * 1024 * 1024
+SEQ = 32
+BATCH = 2
+
+
+def _build_models():
+    out = {}
+    for i, arch in enumerate(ARCH_SET):
+        cfg = dataclasses.replace(ARCHS[arch].reduced(), dtype="float32")
+        model = Model(cfg)
+        params = model.init(jax.random.key(i))
+        rng = np.random.default_rng(i)
+        batch = {"tokens": jax.numpy.asarray(
+            rng.integers(0, cfg.vocab_size, (BATCH, SEQ)), jax.numpy.int32)}
+        out[arch] = (model, params, batch)
+    return out
+
+def _workload(n_lo: int, n_hi: int):
+    """(arch, priority) burst: lo-class first, hi-class arrives behind it."""
+    lo = [(ARCH_SET[i % len(ARCH_SET)], PRIO_LO) for i in range(n_lo)]
+    hi = [(ARCH_SET[i % len(ARCH_SET)], PRIO_HI) for i in range(n_hi)]
+    return lo + hi
+
+
+def _percentiles(lat_ms):
+    return {"n": len(lat_ms),
+            "p50_ms": float(np.percentile(lat_ms, 50)) if lat_ms else 0.0,
+            "p99_ms": float(np.percentile(lat_ms, 99)) if lat_ms else 0.0}
+
+
+def _run_arm(models, workload, executors: int, preempt: bool,
+             honor_priority: bool, hi_delay_s: float = 0.08) -> dict:
+    """One serving arm over a fresh runtime. ``honor_priority=False`` is
+    the serialized baseline: every request submitted at the same priority,
+    so admission degenerates to arrival order (FIFO) — the pre-scheduler
+    behaviour — while the class label is kept for reporting.
+
+    ``hi_delay_s`` staggers the high-urgency arrivals behind the low-class
+    burst so they land while every executor is mid-pass on low-priority
+    work — the case block-boundary preemption exists for (a simultaneous
+    burst would let urgency-weighted admission alone serve the hi class
+    first, and no pass would ever need to yield)."""
+    with tempfile.TemporaryDirectory() as d:
+        rt = MultiModelRuntime(BUDGET, cache_frac=0.25, executors=executors)
+        for arch, (model, params, _) in models.items():
+            rt.add_model(arch, model, params, d)
+        rt.plan(batch=BATCH, seq=SEQ)
+        for arch, (_, _, batch) in models.items():
+            rt.forward(arch, batch)             # warm: trace/dispatch caches
+        sched = ServingScheduler(rt, executors=executors, preempt=preempt)
+        label_of = {}
+        submitted = []
+        for arch, prio in workload:
+            if prio == PRIO_HI and hi_delay_s and not any(
+                    label_of[r.rid] == "hi" for r in submitted):
+                time.sleep(hi_delay_s)          # land mid-pass of the burst
+            r = sched.submit(arch, models[arch][2],
+                             priority=prio if honor_priority else PRIO_LO)
+            label_of[r.rid] = "hi" if prio == PRIO_HI else "lo"
+            submitted.append(r)
+        for r in submitted:
+            r.wait(timeout=600)
+        sched.shutdown()
+        st = rt.stats()
+        rt.close()
+    classes = {"lo": [], "hi": []}
+    for r in submitted:
+        classes[label_of[r.rid]].append(r.latency_s * 1e3)
+    return {
+        "executors": executors,
+        "preempt": preempt,
+        "preemptions": sched.preemptions,
+        "peak_resident_mb": st["peak_resident_mb"],
+        "budget_mb": BUDGET / 1e6,
+        "budget_ok": bool(st["peak_resident_mb"] * 1e6 <= BUDGET),
+        "classes": {k: _percentiles(v) for k, v in classes.items()},
+    }
+
+
+def run(n_lo: int, n_hi: int) -> dict:
+    models = _build_models()
+    workload = _workload(n_lo, n_hi)
+    report = {
+        "models": list(ARCH_SET),
+        "budget_mb": BUDGET / 1e6,
+        "workload": {"lo": n_lo, "hi": n_hi,
+                     "prio_lo": PRIO_LO, "prio_hi": PRIO_HI},
+        "arms": {
+            "serialized": _run_arm(models, workload, executors=1,
+                                   preempt=False, honor_priority=False),
+            "scheduled": _run_arm(models, workload, executors=2,
+                                  preempt=True, honor_priority=True),
+        },
+    }
+    ser = report["arms"]["serialized"]["classes"]["hi"]["p99_ms"]
+    sch = report["arms"]["scheduled"]["classes"]["hi"]["p99_ms"]
+    report["hi_p99_speedup"] = ser / sch if sch else 0.0
+    return report
+
+
+def write_report(report: dict, path: str = None) -> str:
+    path = path or os.path.join(RESULTS_DIR, "BENCH_multi_tenant.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload: the cheap CI data point")
+    ap.add_argument("--lo", type=int, default=None,
+                    help="low-priority requests in the burst")
+    ap.add_argument("--hi", type=int, default=None,
+                    help="high-urgency requests arriving behind the burst")
+    args = ap.parse_args()
+    n_lo = args.lo if args.lo is not None else (8 if args.smoke else 24)
+    n_hi = args.hi if args.hi is not None else (4 if args.smoke else 12)
+
+    report = run(n_lo, n_hi)
+    for arm, a in report["arms"].items():
+        for cls in ("hi", "lo"):
+            c = a["classes"][cls]
+            emit(f"multi_tenant.{arm}.{cls}", c["p99_ms"] * 1e3,
+                 f"n={c['n']};p50_ms={c['p50_ms']:.1f};"
+                 f"p99_ms={c['p99_ms']:.1f};"
+                 f"executors={a['executors']};"
+                 f"preemptions={a['preemptions']};"
+                 f"peak_mb={a['peak_resident_mb']:.1f};"
+                 f"budget_ok={a['budget_ok']}")
+    emit("multi_tenant.hi_p99_speedup", 0.0,
+         f"serialized/scheduled={report['hi_p99_speedup']:.2f}x")
+    path = write_report(report)
+    print(f"# multi-tenant point -> {path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

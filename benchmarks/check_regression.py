@@ -1,0 +1,112 @@
+"""CI perf-regression gate: diff a fresh ``bench_overhead --smoke`` output
+(``results/BENCH_swap_store.json``) against the committed baseline
+(``results/BENCH_baseline.json``).
+
+Per {mmap, rawio, quant, fused} x m{1,2,3} arm:
+
+  * ``bytes_swapped`` / ``bytes_logical`` must match EXACTLY — swap-in
+    byte counts are deterministic (store format x plan), so any drift is a
+    real behaviour change (a quant packing regression, a planner change
+    silently growing I/O), never noise;
+  * ``swap_in_ms`` may drift up to ``--latency-tol`` (default +-20%) —
+    wall clock is hardware-dependent, but a 2x regression must fail the
+    job instead of sailing through as an uploaded artifact nobody reads.
+
+A missing arm in the fresh output is itself a regression (the matrix
+silently shrank). ``--update`` rewrites the baseline from the fresh file
+(run it locally after an INTENTIONAL perf change and commit the result).
+
+Exit status: 0 clean, 1 regression — wire it as a CI step after the bench.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List
+
+from benchmarks.common import RESULTS_DIR
+
+BYTE_KEYS = ("bytes_swapped", "bytes_logical")
+LATENCY_KEYS = ("swap_in_ms",)
+ARMS = ("m1", "m2", "m3")
+
+
+def compare(baseline: Dict, fresh: Dict,
+            latency_tol: float = 0.2) -> List[str]:
+    """Regression messages (empty = clean). Latency may drift DOWN freely
+    (a faster machine or a real win is not a regression); bytes may not
+    move in either direction — fewer bytes than the baseline promised
+    means the baseline is stale and must be consciously re-recorded."""
+    violations = []
+    for backend, rows in sorted(baseline["backends"].items()):
+        fresh_rows = fresh.get("backends", {}).get(backend)
+        if fresh_rows is None:
+            violations.append(f"{backend}: arm missing from fresh results")
+            continue
+        for m in ARMS:
+            base, new = rows.get(m), fresh_rows.get(m)
+            if base is None:
+                continue
+            if new is None:
+                violations.append(f"{backend}.{m}: missing from fresh results")
+                continue
+            for k in BYTE_KEYS:
+                if new.get(k) != base.get(k):
+                    violations.append(
+                        f"{backend}.{m}.{k}: {base.get(k)} -> {new.get(k)} "
+                        f"(bytes must match exactly)")
+            for k in LATENCY_KEYS:
+                b, n = base.get(k), new.get(k)
+                if b is None or n is None:
+                    continue
+                if n > b * (1.0 + latency_tol):
+                    violations.append(
+                        f"{backend}.{m}.{k}: {b:.2f} -> {n:.2f} ms "
+                        f"(+{(n / b - 1.0) * 100:.0f}% > "
+                        f"+{latency_tol * 100:.0f}% tolerance)")
+    return violations
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline",
+                    default=os.path.join(RESULTS_DIR, "BENCH_baseline.json"))
+    ap.add_argument("--fresh",
+                    default=os.path.join(RESULTS_DIR, "BENCH_swap_store.json"))
+    ap.add_argument("--latency-tol", type=float,
+                    default=float(os.environ.get("BENCH_LATENCY_TOL", "0.2")),
+                    help="allowed fractional swap-in latency growth "
+                         "(0.2 = +20%%; env BENCH_LATENCY_TOL overrides "
+                         "the default)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh results "
+                         "(after an intentional perf change; commit it)")
+    args = ap.parse_args()
+
+    if args.update:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline updated from {args.fresh} -> {args.baseline}")
+        return
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    violations = compare(baseline, fresh, args.latency_tol)
+    if violations:
+        print(f"PERF REGRESSION vs {args.baseline} "
+              f"(latency tol +{args.latency_tol * 100:.0f}%):")
+        for v in violations:
+            print(f"  {v}")
+        sys.exit(1)
+    n_arms = sum(len(r) for r in baseline["backends"].values())
+    print(f"perf gate clean: {len(baseline['backends'])} backends, "
+          f"{n_arms} arms within +{args.latency_tol * 100:.0f}% latency / "
+          f"exact bytes of {args.baseline}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,15 +14,25 @@ Several models co-reside under ONE memory budget:
 The partition step reserves the cache + pinned bytes off the top and sizes
 every model's blocks against the remainder, so the ledger can never exceed
 the budget no matter how requests interleave.
+
+With ``executors=K > 1`` the runtime supports K truly CONCURRENT passes
+(one per model at a time — the serving scheduler serializes same-model
+requests): each model's blocks are planned against a 1/K slice of the block
+budget so any K co-running pipelines provably co-fit, engines switch to the
+ledger's blocking ``reserve()`` (priority wakeup) instead of the raising
+``add()``, and :meth:`MultiModelRuntime.replan_budgets` re-splits the block
+budget with :class:`MultiDNNScheduler` (Eq. 1, urgency-weighted) when the
+live queue mix shifts.
 """
 from __future__ import annotations
 
 import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 from repro.core.cost_model import DelayModel
 from repro.core.partition import BlockPlan
-from repro.core.runtime import SwappedModel
+from repro.core.runtime import PassState, SwappedModel
+from repro.core.scheduler import MultiDNNScheduler, ScheduledModel
 from repro.core.swap_engine import (BlockCache, MemoryLedger,
                                     size_aware_policy)
 from repro.models.transformer import Model
@@ -44,7 +54,9 @@ class MultiModelRuntime:
                  prefetch_depth: int = 2, cache_frac: float = 0.25,
                  dm: Optional[DelayModel] = None, delta: float = 0.05,
                  store_backend: Optional[str] = None,
-                 precision: Optional[str] = None):
+                 precision: Optional[str] = None,
+                 executors: int = 1,
+                 reserve_timeout: Optional[float] = 30.0):
         assert 0.0 <= cache_frac < 1.0
         self.budget = int(budget)
         self.mode = mode
@@ -52,6 +64,8 @@ class MultiModelRuntime:
         self.precision = precision
         self.prefetch_depth = max(prefetch_depth, 1)
         self.delta = delta
+        self.executors = max(int(executors), 1)
+        self.reserve_timeout = reserve_timeout
         self.dm = dm if dm is not None else DelayModel()
         self.ledger = MemoryLedger(self.budget)
         self.cache = BlockCache(int(self.budget * cache_frac), self.ledger)
@@ -74,6 +88,11 @@ class MultiModelRuntime:
                           ledger=self.ledger, cache=self.cache, name=name,
                           store_backend=backend,
                           precision=precision or self.precision)
+        if self.executors > 1:
+            # concurrent passes: a transiently full ledger means WAIT for
+            # another tenant's swap-out (priority wakeup), not fail
+            sm.engine.reserve_blocking = True
+            sm.engine.reserve_timeout = self.reserve_timeout
         self.models[name] = sm
         self._planned = False
         return sm
@@ -102,16 +121,25 @@ class MultiModelRuntime:
         """Partition every registered model against the shared budget.
 
         Call after ALL models are registered: the cache + pinned reserve
-        depends on the full co-resident set."""
+        depends on the full co-resident set. With ``executors=K`` each model
+        is planned against a 1/K slice of the block budget, so ANY K
+        concurrently running pipelines (one per model) co-fit: K windows of
+        at most b/K bytes each, plus cache + pinned, stay under ``budget``
+        no matter how the scheduler interleaves them."""
         b = self.block_budget()
         if b <= 0:
             raise ValueError(
                 f"budget {self.budget/1e6:.1f} MB leaves no room for blocks "
                 f"after cache {self.cache.capacity/1e6:.1f} MB + pinned "
                 f"{self._pinned_bytes()/1e6:.1f} MB")
+        per_exec = b // min(self.executors, max(len(self.models), 1))
+        if per_exec <= 0:
+            raise ValueError(
+                f"block budget {b/1e6:.1f} MB split across "
+                f"{self.executors} executors leaves none per pipeline")
         plans = {}
         for name, sm in self.models.items():
-            plans[name] = sm.partition(b, self.dm, batch, seq,
+            plans[name] = sm.partition(per_exec, self.dm, batch, seq,
                                        delta=self.delta)
         # Cache admission informed by the partition tables' per-unit sizes
         # (ROADMAP item (d)): admit exactly the units that provably co-fit,
@@ -124,10 +152,48 @@ class MultiModelRuntime:
         self._planned = True
         return plans
 
+    def replan_budgets(self, urgencies: Mapping[str, float]) -> Dict[str, float]:
+        """React to the live queue mix: re-split the block budget across
+        models with :class:`MultiDNNScheduler` (Eq. 1) instead of the uniform
+        1/K slice, weighting each model by the urgency of its queued work.
+
+        Cheap — partition lookup tables are memoized per planner, so this is
+        the paper's 60-70 ms re-selection path, not a re-profile. Per-model
+        budgets sum to the block budget, so ANY subset of models running
+        concurrently still co-fits (Eq. 1 slices are disjoint). Plans swap
+        atomically; passes already in flight keep their snapshotted block
+        list (``PassState.blocks``). Returns the new per-model budgets."""
+        assert self._planned, "call plan() before replan_budgets()"
+        scheduled = [ScheduledModel(name, sm.planner,
+                                    urgency=max(float(urgencies.get(name, 1.0)),
+                                                1e-6))
+                     for name, sm in self.models.items()]
+        reserved = float(self.cache.capacity + self._pinned_bytes())
+        sched = MultiDNNScheduler(scheduled, available=float(self.budget),
+                                  delta=self.delta, reserved=reserved)
+        for s in sched.models:
+            sm = self.models[s.name]
+            sm.plan, sm.table = s.plan, s.table
+        return {s.name: s.budget for s in sched.models}
+
     # ------------------------------------------------------------ serving
     def forward(self, name: str, batch: dict) -> Tuple[Any, Dict]:
         assert self._planned, "call plan() after registering all models"
         return self.models[name].forward(batch)
+
+    def forward_partial(self, name: str, batch: dict,
+                        state: Optional[PassState] = None,
+                        should_yield=None,
+                        priority: float = 0.0) -> Tuple[PassState, Optional[Dict]]:
+        """Resumable swapped pass for one model (the serving scheduler's
+        entry point): ``priority`` tags the engine so its swap-ins get
+        priority wakeup on the shared ledger; ``should_yield`` is consulted
+        at every block boundary (see :meth:`SwappedModel.forward_partial`).
+        Same-model calls must be serialized by the caller."""
+        assert self._planned, "call plan() after registering all models"
+        sm = self.models[name]
+        sm.engine.set_priority(priority)
+        return sm.forward_partial(batch, state=state, should_yield=should_yield)
 
     def decode(self, name: str, prompt_tokens, max_new_tokens: int = 8,
                max_len: int = 128) -> Tuple[Any, Dict]:

@@ -81,6 +81,34 @@ def swap_schedule(eng: SwapEngine, blocks, unit_names: Sequence[str], m: int):
 
 
 @dataclass
+class PassState:
+    """A swapped forward pass, resumable at block boundaries.
+
+    The serving scheduler's preemption unit: a pass that yields between
+    blocks carries everything needed to continue later — the activation,
+    the position carrier, and the index of the next block — so a preempted
+    request re-executes NOTHING on resume (bit-identical to an
+    uninterrupted pass). ``blocks`` AND the pipeline depth ``m`` are
+    snapshotted at pass start: a live budget re-plan
+    (``MultiModelRuntime.replan_budgets``) only affects passes that start
+    after it, never one already in flight — resuming old blocks at a new
+    plan's (possibly deeper) m could hold more bytes than the old plan's
+    budget slice promised."""
+    blocks: List[Tuple[int, int]]
+    m: int = 2
+    x: Any = None
+    positions: Any = None
+    next_block: int = 0
+    t_active: float = 0.0     # wall clock while actually executing (not paused)
+    preemptions: int = 0
+    logits: Any = None
+
+    @property
+    def done(self) -> bool:
+        return self.next_block >= len(self.blocks)
+
+
+@dataclass
 class Unit:
     name: str
     kind: str                 # embed | head | dense | moe | mamba2 | rwkv6 | shared_attn
@@ -463,29 +491,58 @@ class SwappedModel:
                      "peak_resident_mb": self.engine.stats.peak_resident / 1e6}
 
     # ------------------------------------------------------------ forward
-    def forward(self, batch: dict) -> Tuple[jax.Array, Dict]:
-        """Swapped forward pass. Returns (last-position logits, stats)."""
+    def forward_partial(self, batch: dict, state: Optional[PassState] = None,
+                        should_yield=None) -> Tuple[PassState, Optional[Dict]]:
+        """Swapped forward pass with block-boundary yield points.
+
+        Runs blocks from ``state`` (fresh pass when None). After each block
+        completes (and its handle is swapped out), ``should_yield(state)``
+        decides whether to pause: on True the pass returns ``(state, None)``
+        with in-flight prefetches drained and only cache-resident bytes still
+        charged — the serving scheduler requeues the request and the executor
+        is free for higher-urgency work. Resuming re-executes nothing, so a
+        preempted pass stays bit-identical to an uninterrupted one.
+
+        Returns ``(state, stats)`` with ``stats`` None while the pass is
+        unfinished; on completion ``state.logits`` holds the last-position
+        logits and ``stats`` matches :meth:`forward`.
+        """
         assert self.plan is not None, "call partition()/set_plan() first"
         eng = self.engine
         names = [u.name for u in self.units]
-        x, positions = None, None
+        if state is None:
+            state = PassState(blocks=self.plan.blocks(), m=self.plan.m)
 
         t_start = time.perf_counter()
-        for bi, lo, hi, handle in swap_schedule(eng, self.plan.blocks(),
-                                                names, self.plan.m):
-            t0 = time.perf_counter()
-            for u, p in zip(self.units[lo:hi], handle.params):
-                x, positions = self._apply_unit(u, p, x, positions, batch)
-            x = jax.block_until_ready(x)
-            eng.record_exec(time.perf_counter() - t0)
-        total = time.perf_counter() - t_start
+        pending = state.blocks[state.next_block:]
+        gen = swap_schedule(eng, pending, names, state.m)
+        try:
+            for bi, lo, hi, handle in gen:
+                t0 = time.perf_counter()
+                for u, p in zip(self.units[lo:hi], handle.params):
+                    state.x, state.positions = self._apply_unit(
+                        u, p, state.x, state.positions, batch)
+                state.x = jax.block_until_ready(state.x)
+                eng.record_exec(time.perf_counter() - t0)
+                state.next_block += 1
+                if (should_yield is not None and not state.done
+                        and should_yield(state)):
+                    state.preemptions += 1
+                    break
+        finally:
+            gen.close()     # drains in-flight prefetches on early exit
+        state.t_active += time.perf_counter() - t_start
+        if not state.done:
+            return state, None
+        x = state.x
         if x.ndim == 3 and x.shape[-1] == self.cfg.vocab_size:
-            logits = x[:, -1:]
+            state.logits = x[:, -1:]
         else:
-            logits = x
+            state.logits = x
         st = eng.stats
-        return logits, {
-            "latency_s": total,
+        return state, {
+            "latency_s": state.t_active,
+            "preemptions": state.preemptions,
             "t_in": list(st.t_in), "t_ex": list(st.t_ex), "t_out": list(st.t_out),
             "peak_resident_mb": st.peak_resident / 1e6,
             "meta_mb": self.store.meta_bytes() / 1e6,
@@ -498,6 +555,11 @@ class SwappedModel:
             "bytes_resident_quantized": st.bytes_resident_quantized,
             "vmem_working_set": st.vmem_working_set,
         }
+
+    def forward(self, batch: dict) -> Tuple[jax.Array, Dict]:
+        """Swapped forward pass. Returns (last-position logits, stats)."""
+        state, stats = self.forward_partial(batch)
+        return state.logits, stats
 
     def close(self):
         self.engine.close()

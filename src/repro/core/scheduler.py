@@ -41,6 +41,50 @@ class ScheduledModel:
         return simulate_pipeline(s, d, f, self.planner.dm, self.planner.m)
 
 
+def lift_to_floors(budgets: Sequence[float], floors: Sequence[float],
+                   usable: float, reserved: float = 0.0) -> List[float]:
+    """Lift every budget to its physical floor, funding the lifts from the
+    models with headroom; donors are CLAMPED at their own floor.
+
+    Redistribution is iterative: each round takes the outstanding deficit
+    from the remaining donors in proportion to their headroom, capping each
+    donor's payment at its headroom. A single proportional round already
+    respects the caps when the deficit is computed against the same budgets
+    it is taken from, but clamping must not rely on that coincidence — any
+    upstream change to how the deficit is measured (e.g. proportional to
+    BUDGET rather than headroom, or budgets mutated between the two steps)
+    silently pushed donors below their floor, which downstream turns into a
+    best_partition failure for a model whose budget was supposedly feasible.
+    The loop is invariant-true by construction: no output ever sits below
+    its floor, and the total is preserved.
+    """
+    floors = [float(f) for f in floors]
+    out = [float(b) for b in budgets]
+    if sum(floors) > usable:
+        raise ValueError(
+            f"available memory {usable/1e6:.1f} MB (after "
+            f"{reserved/1e6:.1f} MB reserved) below the "
+            f"sum of per-model floors {sum(floors)/1e6:.1f} MB")
+    deficit = sum(max(f - b, 0.0) for f, b in zip(floors, out))
+    out = [max(b, f) for f, b in zip(floors, out)]
+    while deficit > 1e-6:
+        donors = [i for i in range(len(out)) if out[i] - floors[i] > 1e-9]
+        if not donors:       # float dust: usable >= sum(floors) guarantees
+            break            # the true deficit is already below tolerance
+        hr_total = sum(out[i] - floors[i] for i in donors)
+        take = min(deficit, hr_total)
+        paid = 0.0
+        for i in donors:
+            pay = min(out[i] - floors[i],
+                      (out[i] - floors[i]) / hr_total * take)
+            out[i] -= pay
+            paid += pay
+        deficit -= paid
+        if paid <= 0.0:
+            break
+    return out
+
+
 class MultiDNNScheduler:
     """Paper §6.2: allocate budgets across DNNs, partition each, adapt on
     budget changes. Each model runs its own depth-m prefetch pipeline to
@@ -60,22 +104,13 @@ class MultiDNNScheduler:
         budgets = allocate_budgets([m.demand() for m in self.models],
                                    self.available - self.reserved)
         # Eq. 1 is share-based and can dip below a model's physical floor
-        # (its largest layer). Lift those to their floor and take the lift
-        # from the models with the most headroom.
+        # (its largest layer). Lift those to their floor and fund the lift
+        # from the models with headroom — donors CLAMPED at their own floor.
         floors = [m.planner.min_feasible_budget(self.delta)
                   for m in self.models]
-        deficit = sum(max(f - b, 0.0) for f, b in zip(floors, budgets))
-        if deficit > 0:
-            headroom = [max(b - f, 0.0) for f, b in zip(floors, budgets)]
-            hr_total = sum(headroom)
-            if hr_total < deficit:
-                usable = self.available - self.reserved
-                raise ValueError(
-                    f"available memory {usable/1e6:.1f} MB (after "
-                    f"{self.reserved/1e6:.1f} MB reserved) below the "
-                    f"sum of per-model floors {sum(floors)/1e6:.1f} MB")
-            budgets = [max(b, f) - (max(b - f, 0.0) / hr_total) * deficit
-                       for f, b in zip(floors, budgets)]
+        budgets = lift_to_floors(budgets, floors,
+                                 self.available - self.reserved,
+                                 self.reserved)
         for m, b in zip(self.models, budgets):
             m.budget = b
             m.plan, m.table = m.planner.best_partition(b, self.delta)

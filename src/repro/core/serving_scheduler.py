@@ -1,0 +1,344 @@
+"""Priority/urgency-aware concurrent request scheduling (paper §6, grown
+into an actual serving system).
+
+The single-executor :class:`~repro.serving.engine.MultiModelServingEngine`
+serializes every request — a high-urgency request queued behind a batch
+tenant's full pass eats that pass's whole latency. This module adds the
+serving layer the multi-DNN showcase implies:
+
+  * :class:`ServingRequest`  — one unit of work (model, batch, priority,
+    optional deadline); admission order is the urgency-weighted deadline
+    ``arrival + slack / priority`` (weighted EDF: urgency divides the slack,
+    so a priority-8 request with the same slack sorts like one whose
+    deadline is 8x nearer; aging via ``arrival`` prevents starvation —
+    preempted or passed-over requests keep their original arrival and
+    eventually become the most urgent work in the queue);
+  * :class:`RequestQueue`    — thread-safe admission queue over that order,
+    with model-busy filtering (same-model passes must serialize: one
+    engine, one prefetch pipeline per model);
+  * :class:`ServingScheduler` — K executor threads over one planned
+    :class:`~repro.core.multi_model.MultiModelRuntime`. Different models
+    run truly concurrently (the runtime plans 1/K block-budget slices so
+    K pipelines co-fit; the shared ledger's blocking ``reserve()`` with
+    priority wakeup covers transients). A running pass is PREEMPTED at
+    block boundaries: when strictly-higher-priority work is waiting, the
+    executor parks the pass (its :class:`~repro.core.runtime.PassState`
+    carries the activation + next block; in-flight prefetches are drained,
+    so only cache-resident bytes stay charged), requeues it, and takes the
+    urgent request — a high-urgency arrival never waits for a whole foreign
+    model pass, only for the current block.
+
+Optionally (``auto_rebalance=True``) the scheduler feeds the live queue
+mix's per-model urgencies into ``MultiModelRuntime.replan_budgets`` (Eq. 1
+via :class:`~repro.core.scheduler.MultiDNNScheduler` with the cache +
+pinned bytes reserved), so block plans track WHO is actually asking for
+service, not just who is registered.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.multi_model import MultiModelRuntime
+from repro.core.runtime import PassState
+
+__all__ = ["ServingRequest", "RequestQueue", "ServingScheduler"]
+
+
+@dataclass
+class ServingRequest:
+    """One prefill request against a named model of the runtime.
+
+    ``priority`` is the paper's urgency u (higher = more urgent);
+    ``deadline`` is a relative slack in seconds (None = the queue's default).
+    The scheduler fills ``arrival`` on submit and ``logits`` / ``stats`` /
+    ``latency_s`` on completion; ``error`` carries a failed pass's exception
+    instead of losing it on an executor thread."""
+    model: str
+    batch: dict
+    priority: float = 1.0
+    deadline: Optional[float] = None
+    rid: int = 0
+    arrival: float = 0.0
+    state: Optional[PassState] = None
+    logits: Any = None
+    stats: Optional[Dict] = None
+    error: Optional[BaseException] = None
+    latency_s: float = 0.0
+    done: threading.Event = field(default_factory=threading.Event, repr=False)
+
+    def urgency_key(self, default_slack: float) -> Tuple[float, float, int]:
+        """Urgency-weighted deadline (weighted EDF): smaller sorts first."""
+        slack = self.deadline if self.deadline is not None else default_slack
+        virtual_deadline = self.arrival + slack / max(self.priority, 1e-9)
+        return (virtual_deadline, self.arrival, self.rid)
+
+    def wait(self, timeout: Optional[float] = None) -> "ServingRequest":
+        """Block until served; re-raises the pass's exception, if any."""
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} ({self.model}) not "
+                               f"served within {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self
+
+
+class RequestQueue:
+    """Thread-safe admission queue ordered by urgency-weighted deadline."""
+
+    def __init__(self, default_slack: float = 1.0):
+        self.default_slack = default_slack
+        self._cond = threading.Condition()
+        self._heap: List[Tuple[Tuple[float, float, int], ServingRequest]] = []
+        self._closed = False
+
+    def submit(self, req: ServingRequest) -> None:
+        with self._cond:
+            assert not self._closed, "queue closed"
+            heapq.heappush(self._heap,
+                           (req.urgency_key(self.default_slack), req))
+            self._cond.notify_all()
+
+    def requeue(self, req: ServingRequest) -> None:
+        """Re-admit a preempted (or pop-raced) request. Unlike submit this
+        tolerates a closed queue — a pass preempted during shutdown must
+        land back in the heap to be drained, not raise on an executor
+        thread. The request keeps its ORIGINAL arrival, so its virtual
+        deadline keeps aging: preemption can delay it, never starve it."""
+        with self._cond:
+            heapq.heappush(self._heap,
+                           (req.urgency_key(self.default_slack), req))
+            self._cond.notify_all()
+
+    def pop_ready(self, busy: Sequence[str] = (),
+                  timeout: Optional[float] = None) -> Optional[ServingRequest]:
+        """Most urgent request whose model is not in ``busy`` (same-model
+        passes serialize on one engine). None on timeout; None with the
+        queue closed AND drained means "executor may exit" (check
+        :attr:`closed`)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        busy = set(busy)
+        with self._cond:
+            while True:
+                skipped = []
+                found = None
+                while self._heap:
+                    key, req = heapq.heappop(self._heap)
+                    if req.model in busy:
+                        skipped.append((key, req))
+                    else:
+                        found = req
+                        break
+                for item in skipped:
+                    heapq.heappush(self._heap, item)
+                if found is not None:
+                    return found
+                if self._closed and not self._heap:
+                    return None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    self._cond.wait(remaining)
+                else:
+                    self._cond.wait()
+
+    def max_waiting_priority(self) -> float:
+        """Highest priority among queued (not yet running) requests."""
+        with self._cond:
+            return max((req.priority for _, req in self._heap),
+                       default=float("-inf"))
+
+    def max_runnable_priority(self, busy: Sequence[str] = ()) -> float:
+        """Highest priority among queued requests that could actually run
+        if one more executor freed up — a request whose model is being
+        served ELSEWHERE can't (same-model passes serialize), so a pass
+        yielding for it would drain its prefetches for nothing."""
+        busy = set(busy)
+        with self._cond:
+            return max((req.priority for _, req in self._heap
+                        if req.model not in busy),
+                       default=float("-inf"))
+
+    def kick(self) -> None:
+        """Wake executors blocked in pop_ready: a model just left the busy
+        set, so a request skipped as same-model-busy may now be runnable
+        (without this, the handoff waits out the poll timeout)."""
+        with self._cond:
+            self._cond.notify_all()
+
+    def urgency_mix(self) -> Dict[str, float]:
+        """Per-model max queued priority — the live demand signal
+        ``MultiModelRuntime.replan_budgets`` reacts to."""
+        with self._cond:
+            mix: Dict[str, float] = {}
+            for _, req in self._heap:
+                mix[req.model] = max(mix.get(req.model, 0.0), req.priority)
+            return mix
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._heap)
+
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+
+class ServingScheduler:
+    """K concurrent executors + preemptive priority scheduling over one
+    planned :class:`MultiModelRuntime`.
+
+    Usage::
+
+        rt = MultiModelRuntime(budget, executors=2)
+        rt.add_model("qwen", ...); rt.add_model("gemma", ...)
+        rt.plan(batch=2, seq=32)
+        with ServingScheduler(rt) as sched:
+            hi = sched.submit("qwen", batch, priority=8.0)
+            lo = sched.submit("gemma", batch)        # priority 1.0
+            hi.wait(); lo.wait()
+
+    ``preempt=False`` degrades to run-to-completion (still priority-ordered
+    admission); ``executors=1, preempt=False`` with uniform priorities is
+    exactly the old serialized engine — the bench's baseline arm.
+    """
+
+    def __init__(self, runtime: MultiModelRuntime,
+                 executors: Optional[int] = None, preempt: bool = True,
+                 default_slack: float = 1.0, auto_rebalance: bool = False):
+        self.runtime = runtime
+        self.executors = int(executors if executors is not None
+                             else runtime.executors)
+        assert self.executors >= 1
+        self.preempt = preempt
+        self.auto_rebalance = auto_rebalance
+        self.queue = RequestQueue(default_slack)
+        self.completed: List[ServingRequest] = []
+        self.preemptions = 0
+        self._rid = itertools.count()
+        self._lock = threading.Lock()          # busy set + counters + mix
+        self._busy: set = set()
+        self._last_mix: Dict[str, float] = {}
+        self._threads = [
+            threading.Thread(target=self._worker, name=f"swapnet-exec-{i}",
+                             daemon=True)
+            for i in range(self.executors)]
+        for t in self._threads:
+            t.start()
+
+    # ---------------------------------------------------------- submission
+    def submit(self, model: str, batch: dict, priority: float = 1.0,
+               deadline: Optional[float] = None) -> ServingRequest:
+        req = ServingRequest(model=model, batch=batch,
+                             priority=float(priority), deadline=deadline,
+                             rid=next(self._rid),
+                             arrival=time.perf_counter())
+        self.queue.submit(req)
+        if self.auto_rebalance:
+            self._maybe_rebalance()
+        return req
+
+    def _maybe_rebalance(self) -> None:
+        """Re-split the block budget when the queued demand mix changes."""
+        mix = self.queue.urgency_mix()
+        with self._lock:
+            if mix == self._last_mix or not mix:
+                return
+            self._last_mix = dict(mix)
+        try:
+            self.runtime.replan_budgets(mix)
+        except ValueError:
+            pass          # infeasible mix (floors don't fit): keep old plans
+
+    # ---------------------------------------------------------- executors
+    def _busy_snapshot(self) -> frozenset:
+        with self._lock:
+            return frozenset(self._busy)
+
+    def _worker(self) -> None:
+        rt = self.runtime
+        while True:
+            req = self.queue.pop_ready(busy=self._busy_snapshot(),
+                                       timeout=0.05)
+            if req is None:
+                if self.queue.closed and not len(self.queue):
+                    return
+                continue
+            with self._lock:
+                if req.model in self._busy:
+                    # raced with another executor picking the same model:
+                    # put it back and try again
+                    self.queue.requeue(req)
+                    continue
+                self._busy.add(req.model)
+            try:
+                state, stats = rt.forward_partial(
+                    req.model, req.batch, state=req.state,
+                    should_yield=self._make_yield(req),
+                    priority=req.priority)
+                if stats is None:                       # preempted
+                    req.state = state
+                    with self._lock:
+                        self.preemptions += 1
+                    self.queue.requeue(req)
+                else:
+                    req.logits, req.stats = state.logits, stats
+                    req.latency_s = time.perf_counter() - req.arrival
+                    with self._lock:
+                        self.completed.append(req)
+                    req.done.set()
+            except BaseException as e:                  # noqa: BLE001
+                req.error = e
+                req.done.set()
+            finally:
+                with self._lock:
+                    self._busy.discard(req.model)
+                self.queue.kick()
+
+    def _make_yield(self, req: ServingRequest):
+        if not self.preempt:
+            return None
+
+        def should_yield(state: PassState) -> bool:
+            # Yield only for strictly-higher-priority work that could take
+            # this slot: my own model frees when I park, so requests for it
+            # count; requests for models busy on OTHER executors don't —
+            # yielding for those would re-buy my prefetches for nothing.
+            # Strict inequality: equal-priority tenants never churn.
+            with self._lock:
+                others_busy = self._busy - {req.model}
+            return self.queue.max_runnable_priority(others_busy) > req.priority
+        return should_yield
+
+    # ---------------------------------------------------------- reporting
+    def latency_by_class(self) -> Dict[float, List[float]]:
+        """Completed-request latencies grouped by priority class."""
+        with self._lock:
+            out: Dict[float, List[float]] = {}
+            for r in self.completed:
+                out.setdefault(r.priority, []).append(r.latency_s)
+            return out
+
+    # ---------------------------------------------------------- lifecycle
+    def shutdown(self, wait: bool = True) -> None:
+        self.queue.close()
+        if wait:
+            for t in self._threads:
+                t.join()
+
+    def __enter__(self) -> "ServingScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(wait=True)

@@ -53,39 +53,117 @@ class MemoryLedger:
     One ledger == one memory budget: when co-resident models each hold blocks
     (plus the shared block cache), the SUM of their bytes is what must stay
     under budget — per-engine ledgers cannot see each other's residency.
-    Thread-safe: loader threads add while executor threads drop."""
+    Thread-safe: loader threads add while executor threads drop; a running
+    total keeps every operation O(1) so the lock is held for nanoseconds
+    (concurrent executors contend on it at every block boundary).
+
+    Two admission paths:
+
+      * :meth:`add` — immediate: over budget raises ``MemoryError`` (the
+        single-tenant semantics: a plan whose blocks don't fit is a
+        scheduling bug, fail loudly);
+      * :meth:`reserve` — blocking: over budget WAITS until other tenants
+        drop bytes, with PRIORITY WAKEUP — when bytes free, the
+        highest-priority waiter is admitted first (FIFO within one priority
+        class), so a high-urgency request's swap-ins never queue behind a
+        batch tenant's. Used by concurrent serving (``executors > 1``).
+    """
 
     def __init__(self, budget: Optional[int] = None):
         self.budget = budget
         self._entries: Dict[object, int] = {}
-        self._lock = threading.Lock()
+        self._total = 0
+        self._cond = threading.Condition()
+        # active reserve() tickets, ordered by (-priority, seq): the minimum
+        # ticket is the next waiter allowed to admit (anti-inversion barrier)
+        self._waiting: List[tuple] = []
+        self._seq = 0
         self.peak = 0
 
     @property
     def resident(self) -> int:
-        with self._lock:
-            return sum(self._entries.values())
+        with self._cond:
+            return self._total
+
+    def _admit_locked(self, key: object, nbytes: int) -> bool:
+        """Try to charge under the lock; False if it would exceed budget."""
+        delta = nbytes - self._entries.get(key, 0)
+        if self.budget is not None and self._total + delta > self.budget:
+            return False
+        self._entries[key] = nbytes
+        self._total += delta
+        self.peak = max(self.peak, self._total)
+        return True
 
     def add(self, key: object, nbytes: int, what: str = "block") -> int:
         """Charge ``nbytes``; returns the post-add resident total. Over
-        budget: the entry is ROLLED BACK before raising, so one rejected
-        request cannot permanently inflate a ledger other tenants share."""
-        with self._lock:
-            self._entries[key] = nbytes
-            total = sum(self._entries.values())
-            if self.budget is not None and total > self.budget:
-                del self._entries[key]
-            else:
-                self.peak = max(self.peak, total)
-                return total
+        budget: nothing is recorded before raising, so one rejected request
+        cannot permanently inflate a ledger other tenants share."""
+        with self._cond:
+            if self._admit_locked(key, nbytes):
+                return self._total
+            total = self._total + nbytes
         # The paper treats this as a scheduling bug: blocks must fit b.
         raise MemoryError(
             f"resident {total/1e6:.1f} MB exceeds budget "
             f"{self.budget/1e6:.1f} MB (while adding {what})")
 
+    def try_add(self, key: object, nbytes: int) -> bool:
+        """Non-raising add: False (and no charge) if over budget. The cache
+        insertion path — under concurrency a transiently full ledger means
+        "don't cache this unit", not "kill the request"."""
+        with self._cond:
+            return self._admit_locked(key, nbytes)
+
+    def reserve(self, key: object, nbytes: int, what: str = "block",
+                priority: float = 0.0,
+                timeout: Optional[float] = None) -> int:
+        """Blocking add: wait until ``nbytes`` fit under the budget.
+
+        Waiters are admitted highest-priority-first (ties FIFO); while a
+        higher-priority waiter is pending, later lower-priority arrivals
+        queue behind it even if they would fit — admitting them could eat
+        the bytes the urgent request is waiting for (priority inversion).
+        ``timeout`` bounds the wait (None = forever); on expiry, or when
+        ``nbytes`` alone exceed the budget, raises ``MemoryError``.
+        """
+        if self.budget is not None and nbytes > self.budget:
+            raise MemoryError(
+                f"{what}: {nbytes/1e6:.1f} MB can never fit budget "
+                f"{self.budget/1e6:.1f} MB")
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            self._seq += 1
+            ticket = (-float(priority), self._seq)
+            self._waiting.append(ticket)
+            try:
+                while True:
+                    if (min(self._waiting) == ticket
+                            and self._admit_locked(key, nbytes)):
+                        return self._total
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            raise MemoryError(
+                                f"reserve timeout: {nbytes/1e6:.1f} MB for "
+                                f"{what} did not fit budget "
+                                f"{(self.budget or 0)/1e6:.1f} MB within "
+                                f"{timeout:.1f}s "
+                                f"(resident {self._total/1e6:.1f} MB)")
+                        self._cond.wait(remaining)
+                    else:
+                        self._cond.wait()
+            finally:
+                self._waiting.remove(ticket)
+                # our departure may unblock the next-best waiter
+                self._cond.notify_all()
+
     def drop(self, key: object) -> None:
-        with self._lock:
-            self._entries.pop(key, None)
+        with self._cond:
+            nbytes = self._entries.pop(key, None)
+            if nbytes is not None:
+                self._total -= nbytes
+                self._cond.notify_all()
 
 
 # ------------------------------------------------------------------ cache
@@ -204,15 +282,21 @@ class BlockCache:
             if e is not None:
                 e[2] = max(e[2] - 1, 0)
 
-    def put(self, name: str, params, ledger_bytes: int) -> None:
-        """Insert (idempotent) and evict LRU unpinned idle entries to fit."""
+    def put(self, name: str, params, ledger_bytes: int) -> bool:
+        """Insert (idempotent) and evict LRU unpinned idle entries to fit.
+        Returns whether the unit is cache-resident afterwards: a transiently
+        full shared ledger declines the insert (False) instead of raising —
+        under concurrency "can't cache right now" must not kill the request
+        (the caller charges its own handle instead)."""
         with self._lock:
             if name in self._entries:
-                return
-            # charge first: if the ledger rejects (budget), nothing inserted
-            self.ledger.add(("cache", name), ledger_bytes, f"cache:{name}")
+                return True
+            # charge first: if the ledger declines (budget), nothing inserted
+            if not self.ledger.try_add(("cache", name), ledger_bytes):
+                return False
             self._entries[name] = [params, ledger_bytes, 0]
             self._evict_to_capacity()
+            return name in self._entries
 
     def _evict_to_capacity(self) -> None:
         over = self._unpinned_bytes() - self.capacity
@@ -336,6 +420,16 @@ class SwapEngine:
         # store's precision; the runtime sets it (kernels.vmem_bytes) and
         # swap_in republishes it into stats so resets don't lose it
         self.vmem_working_set = 0
+        # Concurrent serving knobs (set by MultiModelRuntime when
+        # executors > 1): reserve_blocking makes over-budget swap-ins WAIT
+        # for other tenants to free bytes (priority wakeup) instead of
+        # raising; priority is the urgency of the request currently being
+        # served through this engine (per-model passes serialize, so one
+        # value per engine suffices); the timeout converts a genuine
+        # cross-tenant deadlock into a loud MemoryError.
+        self.reserve_blocking = False
+        self.reserve_timeout: Optional[float] = 30.0
+        self.priority = 0.0
         self._loader = ThreadPoolExecutor(max_workers=1,
                                           thread_name_prefix="swapnet-loader")
 
@@ -354,11 +448,21 @@ class SwapEngine:
     def resident_bytes(self) -> int:
         return self.ledger.resident
 
+    def set_priority(self, priority: float) -> None:
+        """Urgency of the request this engine is currently serving; swap-ins
+        issued on the loader thread inherit it for ledger priority wakeup."""
+        self.priority = float(priority)
+
     def _ledger_add(self, handle: BlockHandle) -> None:
-        total = self.ledger.add(id(handle), handle.resident_bytes,
-                                f"block[{','.join(handle.names[:3])}...]"
-                                if len(handle.names) > 3
-                                else f"block[{','.join(handle.names)}]")
+        what = (f"block[{','.join(handle.names[:3])}...]"
+                if len(handle.names) > 3
+                else f"block[{','.join(handle.names)}]")
+        if self.reserve_blocking:
+            total = self.ledger.reserve(id(handle), handle.resident_bytes,
+                                        what, priority=self.priority,
+                                        timeout=self.reserve_timeout)
+        else:
+            total = self.ledger.add(id(handle), handle.resident_bytes, what)
         # per-engine peak = residency observed while THIS engine was adding;
         # resettable via stats.__init__() (the ledger's .peak is the
         # monotone lifetime number the multi-model stats report).
@@ -391,10 +495,10 @@ class SwapEngine:
                 # for rawio, the quantized payload for quant): sizing by
                 # stored bytes would admit sets that overflow capacity and
                 # thrash the cyclic scan to a 0% hit rate.
-                if n and self.cache.admits(name, r.ledger_bytes):
+                if (n and self.cache.admits(name, r.ledger_bytes)
+                        and self.cache.put(name, r.params, r.ledger_bytes)):
                     # hot unit: retained across requests, charged to the
                     # ledger once under the cache's key — not this handle's.
-                    self.cache.put(name, r.params, r.ledger_bytes)
                     if self.cache.acquire(name, count=False) is not None:
                         cached.append(name)
                     else:           # raced out by eviction: charge the handle

@@ -7,6 +7,12 @@ weight budget (blocks streamed through memory during inference).
         --budget-mb 64   # weight-swapped prefill via SwapNet
     PYTHONPATH=src python -m repro.launch.serve --multi qwen2.5-3b,gemma2-9b \
         --reduce smoke --budget-mb 48 --rounds 3   # shared-budget multi-tenant
+    PYTHONPATH=src python -m repro.launch.serve --multi qwen2.5-3b,gemma2-9b \
+        --reduce smoke --budget-mb 48 --executors 2 --priorities 1,8
+        # concurrent priority-aware serving: 2 executor threads, requests
+        # tagged with urgency classes 1 and 8; high-urgency requests are
+        # admitted by urgency-weighted deadline and preempt low-priority
+        # passes at block boundaries
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduce smoke \
         --budget-mb 16 --store quant   # int8 swap units, ~4x less swap-in I/O
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduce smoke \
@@ -26,10 +32,101 @@ from repro.configs import get_arch
 from repro.core.cost_model import DelayModel
 from repro.core.multi_model import MultiModelRuntime
 from repro.core.runtime import SwappedModel
+from repro.core.serving_scheduler import ServingScheduler
 from repro.launch.train import scale_config
 from repro.models.transformer import Model
 from repro.serving.engine import (MultiModelServingEngine, Request,
                                   ServingEngine, pad_prompts)
+
+
+def _percentile(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs, float), q)) if xs else 0.0
+
+
+def _build_multi_runtime(args, workdir: str, executors: int = 1):
+    """Shared --multi setup: parse archs, build + plan the shared-budget
+    runtime, keep (model, params) refs for the lossless checks."""
+    archs = [a.strip() for a in args.multi.split(",") if a.strip()]
+    if len(archs) < 2:
+        raise SystemExit("--multi wants at least two comma-separated archs")
+    rt = MultiModelRuntime(int(args.budget_mb * 1e6),
+                           prefetch_depth=args.prefetch_depth,
+                           cache_frac=args.cache_frac,
+                           store_backend=args.store,
+                           precision=args.precision,
+                           executors=executors)
+    refs = {}
+    for i, arch in enumerate(archs):
+        cfg = scale_config(get_arch(arch), args.reduce)
+        model = Model(cfg)
+        params = model.init(jax.random.key(i))
+        rt.add_model(arch, model, params, workdir)
+        refs[arch] = (model, params)
+    rt.plan(batch=args.requests, seq=args.prompt_len)
+    return archs, rt, refs
+
+
+def serve_multi_scheduled(args) -> None:
+    """K concurrent executors + priority-aware preemptive scheduling over
+    the shared-budget runtime (`core/serving_scheduler.py`): requests carry
+    an urgency class (--priorities, assigned round-robin) and are admitted
+    by urgency-weighted deadline; low-priority passes yield at block
+    boundaries to high-urgency arrivals. Reports per-class p50/p99 latency,
+    preemption count, and the lossless check vs each unswapped model."""
+    classes = [float(p) for p in args.priorities.split(",")]
+    budget = int(args.budget_mb * 1e6)
+    rng = np.random.default_rng(0)
+
+    with tempfile.TemporaryDirectory() as d:
+        archs, rt, refs = _build_multi_runtime(args, d,
+                                               executors=args.executors)
+
+        batches, ref_logits = {}, {}
+        for arch, (model, params) in refs.items():
+            cfg = model.cfg
+            reqs = [Request(i, list(rng.integers(0, cfg.vocab_size,
+                                                 args.prompt_len)))
+                    for i in range(args.requests)]
+            batches[arch] = pad_prompts(cfg, reqs)
+            out, _ = jax.jit(model.prefill)(params, batches[arch])
+            ref_logits[arch] = np.asarray(out[:, -1:])
+            rt.forward(arch, batches[arch])      # warm: jit compile per block
+
+        sched = ServingScheduler(rt, preempt=True,
+                                 auto_rebalance=args.rebalance)
+        submitted = []
+        for round_i in range(args.rounds):
+            for j, arch in enumerate(archs):
+                prio = classes[(round_i * len(archs) + j) % len(classes)]
+                submitted.append(sched.submit(arch, batches[arch],
+                                              priority=prio))
+        for r in submitted:
+            r.wait(timeout=600)
+        sched.shutdown()
+        st = rt.stats()
+        rt.close()
+
+    def _tol(arch):
+        # the repo's lossless standard (see serve_multi): residual diffs are
+        # XLA fusion order of per-unit vs whole-model jit, not the swap path
+        return 1e-4 if refs[arch][0].cfg.dtype == "float32" else 2e-2
+
+    exact = all(
+        np.allclose(np.asarray(r.logits), ref_logits[r.model],
+                    rtol=_tol(r.model), atol=_tol(r.model))
+        for r in submitted
+        if rt.models[r.model].store_backend != "quant")
+    print(f"[serve-sched] {len(archs)} models, {args.executors} executors "
+          f"under {args.budget_mb:.0f} MB: peak resident "
+          f"{st['peak_resident_mb']:.1f} MB "
+          f"({'OK' if st['peak_resident_mb'] * 1e6 <= budget else 'OVER'}), "
+          f"lossless={exact}, preemptions={sched.preemptions}", flush=True)
+    by_class = sched.latency_by_class()
+    for prio in sorted(by_class, reverse=True):
+        lat = [x * 1e3 for x in by_class[prio]]
+        print(f"[serve-sched]   priority {prio:g}: n={len(lat)} "
+              f"p50={_percentile(lat, 50):.1f} ms "
+              f"p99={_percentile(lat, 99):.1f} ms", flush=True)
 
 
 def serve_multi(args) -> None:
@@ -37,25 +134,11 @@ def serve_multi(args) -> None:
     §6 multi-DNN scenario end-to-end. Verifies the swapped prefill logits
     stay bit-identical to each unswapped model, then reports peak residency
     vs the budget, pipeline overlap efficiency, and cache hit rate."""
-    archs = [a.strip() for a in args.multi.split(",") if a.strip()]
-    if len(archs) < 2:
-        raise SystemExit("--multi wants at least two comma-separated archs")
     budget = int(args.budget_mb * 1e6)
     rng = np.random.default_rng(0)
 
     with tempfile.TemporaryDirectory() as d:
-        rt = MultiModelRuntime(budget, prefetch_depth=args.prefetch_depth,
-                               cache_frac=args.cache_frac,
-                               store_backend=args.store,
-                               precision=args.precision)
-        refs = {}
-        for i, arch in enumerate(archs):
-            cfg = scale_config(get_arch(arch), args.reduce)
-            model = Model(cfg)
-            params = model.init(jax.random.key(i))
-            rt.add_model(arch, model, params, d)
-            refs[arch] = (model, params)
-        rt.plan(batch=args.requests, seq=args.prompt_len)
+        archs, rt, refs = _build_multi_runtime(args, d)
 
         engine = MultiModelServingEngine(rt)
         exact = True
@@ -135,6 +218,19 @@ def main() -> None:
                          "exercise the shared block cache)")
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="pipeline residency m (1=serial, 2=double buffer)")
+    ap.add_argument("--executors", type=int, default=1,
+                    help="concurrent executor threads for --multi serving "
+                         "(>1 enables the priority-aware preemptive "
+                         "scheduler; each model's blocks are planned "
+                         "against a 1/K budget slice so K pipelines co-fit)")
+    ap.add_argument("--priorities", default="1",
+                    help="comma-separated urgency classes assigned "
+                         "round-robin to --multi requests (e.g. '1,8'; "
+                         "higher = more urgent — admitted earlier and "
+                         "preempts lower classes at block boundaries)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="re-split the block budget (MultiDNNScheduler "
+                         "Eq. 1) whenever the queued urgency mix changes")
     ap.add_argument("--cache-frac", type=float, default=0.25,
                     help="fraction of the budget reserved for the shared "
                          "hot-block cache (multi-tenant mode)")
@@ -158,7 +254,10 @@ def main() -> None:
     if args.multi:
         if args.budget_mb is None:
             raise SystemExit("--multi requires --budget-mb")
-        serve_multi(args)
+        if args.executors > 1:
+            serve_multi_scheduled(args)
+        else:
+            serve_multi(args)
         return
     if not args.arch:
         raise SystemExit("need --arch (single model) or --multi a,b")

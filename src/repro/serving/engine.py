@@ -31,6 +31,11 @@ class Request:
     max_new_tokens: int = 16
     eos: Optional[int] = None
     output: List[int] = field(default_factory=list)
+    # urgency u (paper §6.2): the priority-aware scheduler
+    # (core/serving_scheduler.py) admits by urgency-weighted deadline and
+    # preempts lower classes at block boundaries; the serialized engines
+    # below ignore it (arrival order).
+    priority: float = 1.0
 
 
 def pad_prompts(cfg, reqs: Sequence["Request"]) -> Dict:
@@ -101,8 +106,10 @@ class MultiModelServingEngine:
 
     Wraps a planned :class:`~repro.core.multi_model.MultiModelRuntime`:
     requests are tagged with the model they target and served in arrival
-    order, one at a time (the single-executor edge-device model). Every
-    forward streams the target model's blocks through the shared ledger;
+    order, one at a time (the single-executor edge-device model; for K
+    concurrent executors with priority-aware admission and block-boundary
+    preemption, see :class:`repro.core.serving_scheduler.ServingScheduler`).
+    Every forward streams the target model's blocks through the shared ledger;
     hot units (embeddings, heads, shared blocks) of recently-served models
     stay in the shared cache, so alternating tenants pay the swap-in cost
     only for the cold middle of each model.

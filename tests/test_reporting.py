@@ -47,3 +47,46 @@ def test_report_renders():
     assert s.count("encoder-only") == 2
     r = roofline_table()
     assert "**" in r            # dominant terms highlighted
+
+
+# ------------------------------------------------------ perf-regression gate
+def _baseline_matrix():
+    import json
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "BENCH_baseline.json")
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def test_regression_gate_clean_on_identity():
+    from benchmarks.check_regression import compare
+    base = _baseline_matrix()
+    assert compare(base, base) == []
+
+
+def test_regression_gate_fails_synthetic_2x_latency():
+    """The CI acceptance case: a doctored 2x swap-in latency on every arm
+    must trip the gate (it exceeds the +-20% tolerance by construction)."""
+    import copy
+    from benchmarks.check_regression import compare
+    base = _baseline_matrix()
+    doctored = copy.deepcopy(base)
+    for rows in doctored["backends"].values():
+        for m in ("m1", "m2", "m3"):
+            rows[m]["swap_in_ms"] *= 2.0
+    violations = compare(base, doctored, latency_tol=0.2)
+    assert len(violations) >= 12            # every backend x m arm trips
+    # but a run 2x FASTER is not a regression
+    assert compare(doctored, base, latency_tol=0.2) == []
+
+
+def test_regression_gate_fails_byte_drift_and_missing_arm():
+    import copy
+    from benchmarks.check_regression import compare
+    base = _baseline_matrix()
+    drift = copy.deepcopy(base)
+    drift["backends"]["quant"]["m2"]["bytes_swapped"] += 1
+    assert any("bytes must match exactly" in v for v in compare(base, drift))
+    shrunk = copy.deepcopy(base)
+    del shrunk["backends"]["fused"]
+    assert any("missing" in v for v in compare(base, shrunk))

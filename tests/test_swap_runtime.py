@@ -147,3 +147,46 @@ def test_multi_dnn_scheduler_adapts():
     # a budget below the sum of physical floors is rejected loudly
     with pytest.raises(ValueError, match="below the sum"):
         sched.adapt(floors * 0.5)
+
+
+def test_lift_to_floors_clamps_donors():
+    from repro.core.scheduler import lift_to_floors
+    # three-model boundary case: the deficit equals the donors' total
+    # headroom, so every donor lands EXACTLY at its floor — one step past
+    # this (any sharing rule that takes more than a donor's headroom, e.g.
+    # proportional to budget) pushes a donor below floor
+    out = lift_to_floors([4.0, 13.0, 13.0], [10.0, 10.0, 10.0], usable=30.0)
+    assert out == [10.0, 10.0, 10.0]
+    # skewed headroom: lifted model reaches its floor, donors stay >= theirs
+    out = lift_to_floors([2.0, 4.5, 23.5], [4.0, 4.0, 4.0], usable=30.0)
+    assert abs(sum(out) - 30.0) < 1e-9
+    for b, f in zip(out, [4.0, 4.0, 4.0]):
+        assert b >= f - 1e-9
+    assert out[0] == 4.0
+    # infeasible: floors alone exceed usable
+    with pytest.raises(ValueError, match="below the sum"):
+        lift_to_floors([1.0, 1.0, 1.0], [10.0, 10.0, 10.0], usable=20.0)
+
+
+def test_three_model_floor_lift_keeps_donors_feasible():
+    """Eq. 1 starves a big-layer/low-urgency model below its physical
+    floor; the lift must bring it to the floor WITHOUT pushing either
+    donor below its own (every model's best_partition stays feasible)."""
+    from repro.core.cost_model import LayerInfo
+    dm = DelayModel()
+    models = []
+    # model A: one dominant 9-byte layer (high floor), tiny share appeal
+    layers = {"A": [9.0, 1.0], "B": [1.0] * 20, "C": [1.0] * 20}
+    urgency = {"A": 0.01, "B": 10.0, "C": 10.0}
+    for name, sizes in layers.items():
+        infos = [LayerInfo(f"{name}{i}", int(s * 1e6), 1, 1e9)
+                 for i, s in enumerate(sizes)]
+        models.append(ScheduledModel(name, PartitionPlanner(infos, dm),
+                                     urgency=urgency[name]))
+    floors = {m.name: m.planner.min_feasible_budget() for m in models}
+    sched = MultiDNNScheduler(models, available=40e6)
+    for m in sched.models:
+        assert m.budget >= floors[m.name] - 1e-6, \
+            f"{m.name} below its floor after lift"
+        assert m.plan is not None            # partition feasible at budget
+    assert sum(m.budget for m in sched.models) <= 40e6 + 1e-6
