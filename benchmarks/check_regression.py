@@ -2,7 +2,7 @@
 (``results/BENCH_swap_store.json``) against the committed baseline
 (``results/BENCH_baseline.json``).
 
-Per {mmap, rawio, quant, fused} x m{1,2,3} arm:
+Per {mmap, rawio, quant, fused, directio} x m{1,2,3} arm:
 
   * ``bytes_swapped`` / ``bytes_logical`` must match EXACTLY — swap-in
     byte counts are deterministic (store format x plan), so any drift is a

@@ -1,16 +1,12 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
-import contextlib
-import io
 import os
 import sys
-import tempfile
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -41,6 +37,26 @@ def cosine_fidelity(a, b) -> float:
     n = min(a.size, b.size)       # pruned model may have same-size head output
     a, b = a[:n], b[:n]
     return float(a @ b / max(np.linalg.norm(a) * np.linalg.norm(b), 1e-30))
+
+
+def build_mlp(n: int = 12, dim: int = 1280, seed: int = 3):
+    """Uniform fc stack: the matmul-dominated swap workload (the paper's
+    LLM-outlook proxy). Every weight is a 2-D ``w`` — fused-routable — so
+    the quantized-resident path engages for the WHOLE model, unlike the
+    conv nets whose 4-D kernels all take the host-dequant path."""
+    from repro.models import vision
+    layers = [vision.Layer("fc", dim, dim) for _ in range(n)]
+    params = vision.init_convnet(layers, jax.random.key(seed))
+    return layers, params
+
+
+def mlp_infos(params, dim: int, batch: int):
+    """LayerInfo rows for a :func:`build_mlp` stack."""
+    from repro.core.cost_model import LayerInfo
+    return [LayerInfo(f"mlp{i:02d}",
+                      sum(np.asarray(x).nbytes for x in jax.tree.leaves(p)),
+                      len(jax.tree.leaves(p)), 2.0 * batch * dim * dim)
+            for i, p in enumerate(params)]
 
 
 def scenario_models():

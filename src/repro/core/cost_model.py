@@ -1,15 +1,26 @@
 """Delay abstractions (paper §6.1) + model info table (Table 2).
 
 SwapNet exposes three per-block delays to schedulers:
-    t_in  = alpha * s_i + beta * d_i      (swap-in DMA + assembly references)
-    t_ex  = gamma * f_i                   (execution)
-    t_out = eta * d_i                     (pointer reset + GC)
+    t_in  = alpha * s_i + beta * d_i + kappa   (swap-in DMA + assembly
+                                                references + per-block fixed
+                                                dispatch overhead)
+    t_ex  = gamma * f_i                        (execution)
+    t_out = eta * d_i                          (pointer reset + GC)
 with (alpha, beta, gamma, eta) profiled once per device by linear regression
 (Fig. 9). s_i = block bytes, d_i = parameter depth (# tensors), f_i = FLOPs.
+
+``kappa`` is the intercept of the swap-in regression: the fixed cost every
+block pays regardless of size — prefetch-future bookkeeping, the loader
+thread hop, the jitted block call dispatch. The paper's linear model omits
+it, which makes "more, smaller blocks" look free; with the intercept the
+block-count search (``PartitionPlanner.best_partition``) has a real
+optimum: finer plans expose a smaller cold first block (better pipeline
+overlap) until the per-block overhead eats the gain.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -33,9 +44,10 @@ class DelayModel:
     beta: float = 5.2e-5     # s / reference   (paper: 50-55 us per reference)
     gamma: float = 2.0e-11   # s / FLOP
     eta: float = 1.5e-5      # s / reference
+    kappa: float = 2.5e-4    # s / block       (fixed swap-in dispatch cost)
 
     def t_in(self, size: float, depth: float) -> float:
-        return self.alpha * size + self.beta * depth
+        return self.alpha * size + self.beta * depth + self.kappa
 
     def t_ex(self, flops: float) -> float:
         return self.gamma * flops
@@ -49,20 +61,73 @@ class DelayModel:
             samples_out: Sequence[Tuple[float, float]]) -> "DelayModel":
         """Linear regression over profiled samples (paper Fig. 9).
 
-        samples_in:  (size, depth, measured_t_in)
+        samples_in:  (size, depth, measured_t_in) — fit WITH an intercept
+                     column, so the per-block fixed cost ``kappa`` is
+                     estimated from the same profile instead of assumed.
+                     The regression minimizes RELATIVE error (rows weighted
+                     1/t): timer noise scales with the measured latency, so
+                     unweighted OLS lets the biggest blocks drown the
+                     depth/intercept terms that only small blocks identify
         samples_ex:  (flops, measured_t_ex)
         samples_out: (depth, measured_t_out)
         """
-        A = np.asarray([(s, d) for s, d, _ in samples_in], np.float64)
+        A = np.asarray([(s, d, 1.0) for s, d, _ in samples_in], np.float64)
         y = np.asarray([t for *_, t in samples_in], np.float64)
-        (alpha, beta), *_ = np.linalg.lstsq(A, y, rcond=None)
+        w = 1.0 / np.maximum(y, 1e-12)
+        (alpha, beta, kappa), *_ = np.linalg.lstsq(A * w[:, None], y * w,
+                                                   rcond=None)
+        # warm-page-cache profiles can fit a (meaningless) negative
+        # bandwidth or intercept; clamp — the model must stay monotone
+        alpha = max(float(alpha), 0.0)
         fx = np.asarray([f for f, _ in samples_ex], np.float64)
         ty = np.asarray([t for _, t in samples_ex], np.float64)
         gamma = float(fx @ ty / max(fx @ fx, 1e-30))
         dx = np.asarray([d for d, _ in samples_out], np.float64)
         oy = np.asarray([t for _, t in samples_out], np.float64)
         eta = float(dx @ oy / max(dx @ dx, 1e-30))
-        return DelayModel(float(alpha), float(beta), gamma, eta)
+        return DelayModel(float(alpha), float(beta), gamma, eta,
+                          max(float(kappa), 0.0))
+
+    def calibrated(self, store, names: Optional[Sequence[str]] = None
+                   ) -> "DelayModel":
+        """Re-anchor ``alpha`` to a STORE's measured swap channel.
+
+        The profiled coefficients describe one channel (the mmap profile
+        rig). Store backends change the per-byte cost structurally — the
+        quantized store adds host unpack/dequant work per byte, rawio adds
+        staging copies — and planning a backend with another backend's
+        alpha puts the block-count search in the wrong regime entirely: it
+        under-costs fused swap-ins ~3x, concludes swap-in is nearly free,
+        and stops at a shallow plan whose huge cold first block caps the
+        achievable overlap (the PR 6 fused-path gap, planner half).
+
+        Reads every unit once through ``store.read_unit`` (warm page
+        cache, so this measures the CPU-side channel cost — read syscall,
+        unpack/dequant, device dispatch — not cold storage latency) and
+        rescales ONLY alpha so the model's total swap-in time over the
+        store equals the measured total, net of the depth/intercept terms,
+        which keep their profiled values:
+
+            alpha' = max(0, (sum t - beta * sum d - kappa * n) / sum s)
+
+        with s the unit's RESIDENT bytes — the same currency
+        ``resident_infos`` feeds the planner."""
+        import jax as _jax
+        names = list(store.order) if names is None else list(names)
+        t_sum = s_sum = d_sum = n_read = 0.0
+        for name in names:
+            if store.skeletons[name].nbytes == 0:
+                continue
+            t0 = time.perf_counter()
+            r = store.read_unit(name)
+            t_sum += time.perf_counter() - t0
+            s_sum += store.resident_nbytes(name)
+            d_sum += len(_jax.tree.leaves(r.params))
+            n_read += 1
+        if s_sum <= 0:
+            return self
+        alpha = (t_sum - self.beta * d_sum - self.kappa * n_read) / s_sum
+        return dataclasses.replace(self, alpha=max(alpha, 0.0))
 
     def r2_in(self, samples_in) -> float:
         y = np.asarray([t for *_, t in samples_in])

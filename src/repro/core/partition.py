@@ -230,23 +230,46 @@ class PartitionPlanner:
 
     def best_partition(self, budget: float, delta: float = 0.05,
                        max_extra_blocks: int = 8,
-                       allow_degrade: bool = True) -> Tuple[BlockPlan, List[TableRow]]:
-        """Pick n via the paper's rule, then the feasible row with least
-        latency; if no candidate fits, increase n (smaller blocks). If even
-        single-layer blocks cannot satisfy Eq. 3 at the planner's residency m
-        (m consecutive blocks resident), progressively shallow the pipeline
-        down to m=1 — sequential swapping with no overlap — before giving up
-        (a below-paper-minimum budget)."""
+                       allow_degrade: bool = True,
+                       improve_tol: float = 0.01) -> Tuple[BlockPlan, List[TableRow]]:
+        """Pick the feasible partition with the least SIMULATED latency over
+        a range of block counts, starting at the paper's n = ceil(m*s/b).
+
+        The paper stops at the first feasible n — correct for its byte-bound
+        workloads, but it under-pipelines backends whose resident bytes are
+        far below the budget (the quantized/fused stores): the budget admits
+        the whole model in m blocks, so the plan degenerates to n == m and
+        the cold first block — half the model — can never be hidden behind
+        compute. Searching upward from n0 lets ``simulate_pipeline`` trade
+        a smaller exposed first block against the per-block fixed cost
+        (``DelayModel.kappa``); the search stops after two consecutive block
+        counts fail to improve the best makespan by ``improve_tol``.
+
+        If no candidate fits even at single-layer blocks, progressively
+        shallow the pipeline down to m=1 — sequential swapping with no
+        overlap — before giving up (a below-paper-minimum budget)."""
         total = float(np.sum(self.sizes))
         depths = tuple(range(self.m, 0, -1)) if allow_degrade else (self.m,)
         for m in depths:
             n0 = min(max(n_blocks_for_budget(total, budget, m), 1), self.L)
+            best_row = best_table = best_m = None
+            stale = 0
             for n in range(n0, min(n0 + max_extra_blocks, self.L) + 1):
                 table = self.lookup_table(n, budget, delta, m=m)
                 feasible = [r for r in table if r.latency is not None]
-                if feasible:
-                    best = min(feasible, key=lambda r: r.latency)
-                    return BlockPlan(best.points, self.L, m), table
+                if not feasible:
+                    continue
+                row = min(feasible, key=lambda r: r.latency)
+                if (best_row is None
+                        or row.latency < best_row.latency * (1 - improve_tol)):
+                    best_row, best_table, best_m = row, table, m
+                    stale = 0
+                else:
+                    stale += 1
+                    if stale >= 2:      # two counts without improvement
+                        break
+            if best_row is not None:
+                return BlockPlan(best_row.points, self.L, best_m), best_table
         raise ValueError(
             f"no feasible partition within budget {budget/1e6:.1f} MB "
             f"(largest layer exceeds it even with m=1)")

@@ -365,13 +365,25 @@ class SwapStats:
     ``vmem_working_set`` is the per-kernel figure: bytes the weight-stream
     matmul holds in VMEM at the default tiling for this engine's store
     precision (set by the runtime from ``kernels.swap_linear.vmem_bytes``;
-    the fused path shrinks the weight window 2x int8 / 4x int4)."""
+    the fused path shrinks the weight window 2x int8 / 4x int4).
+
+    ``timeline`` is the per-stage event log the overlap analysis runs on:
+    ``(stage, start, end)`` tuples in ``time.perf_counter`` absolute
+    seconds. Loader-side stages come from each :class:`UnitRead` ("read" =
+    storage -> host, "unpack" = dequant/assembly, "dispatch" = host ->
+    device incl. the on-device flush); the engine adds executor-side
+    events ("wait" = stall on a prefetch future, "exec" = block compute).
+    A healthy depth-m pipeline shows block i+1's "read" span INSIDE block
+    i's "exec" span — :meth:`overlap_seconds` measures exactly that, so a
+    serialization point is attributable to the stage that caused it
+    instead of disappearing into an aggregate latency."""
     t_in: List[float] = field(default_factory=list)
     t_in_io: List[float] = field(default_factory=list)
     t_in_asm: List[float] = field(default_factory=list)
     t_ex: List[float] = field(default_factory=list)
     t_out: List[float] = field(default_factory=list)
     t_wait: List[float] = field(default_factory=list)   # executor stalls
+    timeline: List[tuple] = field(default_factory=list)
     peak_resident: int = 0
     bytes_swapped: int = 0       # actual storage->host I/O traffic
     bytes_logical: int = 0       # dequantized bytes those swap-ins delivered
@@ -379,6 +391,45 @@ class SwapStats:
     vmem_working_set: int = 0    # per-kernel VMEM bytes at this precision
     cache_hits: int = 0
     cache_misses: int = 0
+
+    # ------------------------------------------------------------ timeline
+    def stage_spans(self, stage: str) -> List[tuple]:
+        """All ``(start, end)`` spans recorded for ``stage``, in log order."""
+        return [(s, e) for st, s, e in self.timeline if st == stage]
+
+    def stage_seconds(self, stage: str) -> float:
+        """Total wall-clock spent in ``stage`` across the log."""
+        return sum(e - s for _, s, e in
+                   (ev for ev in self.timeline if ev[0] == stage))
+
+    def overlap_seconds(self, stage_a: str, stage_b: str) -> float:
+        """Wall-clock during which ``stage_a`` and ``stage_b`` ran
+        CONCURRENTLY (intersection of their merged span sets) — e.g.
+        ``overlap_seconds("read", "exec")`` is the host-read time genuinely
+        hidden behind compute, the quantity the fused-path fix targets."""
+
+        def merged(stage):
+            spans = sorted(self.stage_spans(stage))
+            out: List[List[float]] = []
+            for s, e in spans:
+                if out and s <= out[-1][1]:
+                    out[-1][1] = max(out[-1][1], e)
+                else:
+                    out.append([s, e])
+            return out
+
+        a, b = merged(stage_a), merged(stage_b)
+        total, i, j = 0.0, 0, 0
+        while i < len(a) and j < len(b):
+            lo = max(a[i][0], b[j][0])
+            hi = min(a[i][1], b[j][1])
+            if hi > lo:
+                total += hi - lo
+            if a[i][1] < b[j][1]:
+                i += 1
+            else:
+                j += 1
+        return total
 
     def overlap_efficiency(self) -> float:
         """Fraction of total swap-in time hidden behind execution: 1.0 means
@@ -487,6 +538,7 @@ class SwapEngine:
                 io_s += r.io_s
                 asm_s += r.asm_s
                 loaded += r.io_bytes
+                self.stats.timeline.extend(r.stages)
                 self.stats.bytes_logical += n
                 self.stats.bytes_resident_quantized += r.quantized_bytes
                 self.stats.cache_misses += 1
@@ -534,7 +586,9 @@ class SwapEngine:
         """Block on a prefetch future, recording the stall as visible t_in."""
         t0 = time.perf_counter()
         handle = fut.result()
-        self.stats.t_wait.append(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.stats.t_wait.append(t1 - t0)
+        self.stats.timeline.append(("wait", t0, t1))
         return handle
 
     # -------------------------------------------------------------- swap-out
@@ -553,7 +607,12 @@ class SwapEngine:
         return dt
 
     def record_exec(self, seconds: float) -> None:
+        """Executor-side compute accounting: called right after a block's
+        forward with its wall-clock, so the "exec" timeline span is the
+        interval ending now."""
+        now = time.perf_counter()
         self.stats.t_ex.append(seconds)
+        self.stats.timeline.append(("exec", now - seconds, now))
 
     def close(self) -> None:
         self._loader.shutdown(wait=True)

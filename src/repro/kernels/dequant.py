@@ -115,11 +115,17 @@ def pack_int4(q: np.ndarray) -> np.ndarray:
 
 def unpack_int4(carrier: np.ndarray, rows: int) -> np.ndarray:
     """Host-side inverse of :func:`pack_int4`: [Rp, C] carrier -> [rows, C]
-    sign-extended int8 values (the zero pad row, if any, is sliced off)."""
-    u = carrier.view(np.uint8)
-    low = (u & 0xF).astype(np.int8)
-    high = (u >> 4).astype(np.int8)
-    out = np.empty((2 * u.shape[0], u.shape[1]), np.int8)
-    out[0::2] = np.where(low > 7, low - 16, low)
-    out[1::2] = np.where(high > 7, high - 16, high)
+    sign-extended int8 values (the zero pad row, if any, is sliced off).
+
+    This runs on the swap-in loader thread for every lazily-dequantized
+    leaf (see quantized_store), so it is written to touch the carrier a
+    minimal number of times: arithmetic right-shift sign-extends the high
+    nibble directly, and ``(u << 4) >> 4`` sign-extends the low one — two
+    strided writes into the output instead of mask/compare temporaries.
+    """
+    s = carrier.view(np.int8)
+    out = np.empty((2 * s.shape[0], s.shape[1]), np.int8)
+    np.right_shift(s, 4, out=out[1::2])                     # high nibble
+    low = (carrier.view(np.uint8) << 4).view(np.int8)
+    np.right_shift(low, 4, out=out[0::2])                   # low nibble
     return out[:rows]

@@ -237,13 +237,17 @@ def main() -> None:
     ap.add_argument("--budget-mb", type=float, default=None,
                     help="SwapNet weight budget: stream blocks during prefill")
     ap.add_argument("--store", default="mmap",
-                    choices=["mmap", "rawio", "quant"],
+                    choices=["mmap", "rawio", "quant", "directio"],
                     help="block-store backend: mmap (zero-copy, lossless), "
                          "rawio (read()-based ablation arm), quant (per-"
                          "channel quantized swap units kept quantized-"
                          "resident: 2-D matmul weights stream through the "
                          "fused dequant-matmul kernel, 4-8x less swap-in "
-                         "I/O, bounded error)")
+                         "I/O, bounded error), directio (O_DIRECT lossless "
+                         "reads that bypass the page cache — no hidden "
+                         "double-caching of swapped bytes under a tight "
+                         "budget; falls back to buffered reads on "
+                         "filesystems without O_DIRECT)")
     ap.add_argument("--precision", default=None, choices=["int8", "int4"],
                     help="quant-store unit precision override (default: the "
                          "arch config's swap_precision; int4 packs two "

@@ -8,15 +8,18 @@ Pick a backend by name::
 Backends: ``mmap`` (zero-copy, the paper's full system), ``rawio`` (read()-
 based, the copy_in ablation arm), ``quant`` (per-channel quantized swap
 units: ``bits=8`` int8 or ``bits=4`` packed int4; ``eager=False`` keeps
-units quantized-RESIDENT as QuantizedTensor leaves for the fused
-dequant-matmul path instead of dequantizing at swap-in). See base.py for
-the BlockStore contract.
+fused-routable weights quantized-RESIDENT as QuantizedTensor leaves for the
+fused dequant-matmul path and dequantizes the rest on the loader thread),
+``directio`` (O_DIRECT page-cache-bypassing reads with an aligned buffer
+arena and queue-depth control). See base.py for the BlockStore contract and
+docs/ARCHITECTURE.md for how the tier fits the swap pipeline.
 """
 from __future__ import annotations
 
 from typing import Dict, Sequence, Tuple, Type
 
 from repro.store.base import BlockStore, UnitRead, as_reader, escape_name
+from repro.store.directio_store import DirectIOStore
 from repro.store.mmap_store import LayerStore, MmapStore
 from repro.store.quantized_store import QuantizedStore
 from repro.store.rawio_store import RawIOStore
@@ -25,6 +28,7 @@ STORE_BACKENDS: Dict[str, Type[BlockStore]] = {
     "mmap": MmapStore,
     "rawio": RawIOStore,
     "quant": QuantizedStore,
+    "directio": DirectIOStore,
 }
 
 
@@ -38,5 +42,5 @@ def build_store(units: Sequence[Tuple[str, dict]], workdir: str,
 
 
 __all__ = ["BlockStore", "UnitRead", "MmapStore", "RawIOStore",
-           "QuantizedStore", "LayerStore", "STORE_BACKENDS", "build_store",
-           "as_reader", "escape_name"]
+           "QuantizedStore", "DirectIOStore", "LayerStore", "STORE_BACKENDS",
+           "build_store", "as_reader", "escape_name"]

@@ -53,18 +53,33 @@ def escape_name(name: str) -> str:
 class UnitRead:
     """One unit's swap-in, as performed by a store backend.
 
+    This is the store -> engine contract: ``SwapEngine.swap_in`` consumes a
+    ``UnitRead`` per non-cached unit and does ALL the bookkeeping from it —
+    it never inspects the params tree or the files itself.
+
     ``params``          — assembled (device-transferred) parameter tree;
     ``io_bytes``        — bytes actually moved storage -> host (what
                           ``SwapStats.bytes_swapped`` accumulates; quantized
                           backends move 4-8x less than the logical unit
-                          size);
+                          size; direct-I/O reads whole aligned sectors);
     ``ledger_bytes``    — resident bytes to charge to the memory ledger
                           (mode-induced extra copies included);
     ``io_s/asm_s``      — the t_in split: fetch vs assembly wall-clock;
     ``quantized_bytes`` — payload bytes delivered STILL QUANTIZED (as
                           ``QuantizedTensor`` leaves, the fused-path
                           residency; 0 for eager/raw backends) — what
-                          ``SwapStats.bytes_resident_quantized`` reports.
+                          ``SwapStats.bytes_resident_quantized`` reports;
+    ``stages``          — the per-stage timeline of this read: ``(stage,
+                          start, end)`` tuples in ``time.perf_counter``
+                          absolute seconds, run on the LOADER thread. Stage
+                          names are backend-chosen from {"read", "unpack",
+                          "dispatch"}: "read" is storage -> host bytes,
+                          "unpack" is dequant/unpack/assembly work, and
+                          "dispatch" is the host -> device put (kernel-
+                          visible bytes). ``SwapEngine`` folds these into
+                          ``SwapStats.timeline`` so a stall is attributable
+                          to the stage that caused it (executor-side "wait"
+                          / "exec" events are recorded by the engine).
     """
     params: Any
     io_bytes: int
@@ -72,6 +87,7 @@ class UnitRead:
     io_s: float = 0.0
     asm_s: float = 0.0
     quantized_bytes: int = 0
+    stages: Tuple[Tuple[str, float, float], ...] = ()
 
 
 class BlockStore:
@@ -82,7 +98,11 @@ class BlockStore:
         smallest divisible units; shared units (same name) are stored once;
       * ``open()``                  — prepare for reading (idempotent hook);
       * ``read_unit(name)``         — one unit storage -> host -> device,
-        returning a :class:`UnitRead`;
+        returning a :class:`UnitRead`. Called ONLY from the engine's single
+        loader thread, so backends may keep per-read scratch state (e.g.
+        the direct-I/O buffer arena) without locking against their own
+        reads — but a store SHARED by several engines must tolerate
+        concurrent ``read_unit`` calls from their loader threads;
       * ``nbytes(name)``            — LOGICAL (dequantized) unit bytes: what
         partitioning and block accounting reason about;
       * ``stored_nbytes(name)``     — bytes the unit occupies on storage
@@ -97,6 +117,12 @@ class BlockStore:
 
     Blocks are ranges of units; adaptation only re-indexes ranges (paper
     §6.2.2 operations 2-3), never rewrites files.
+
+    Registered backends (``repro.store.STORE_BACKENDS``): ``mmap`` (zero-
+    copy page-cache reads), ``rawio`` (buffered read() ablation arm),
+    ``quant`` (int8/int4 quantized payloads), ``directio`` (O_DIRECT
+    page-cache-bypassing reads with an aligned pooled-buffer arena and
+    queue-depth control). See docs/ARCHITECTURE.md for the full map.
     """
 
     backend = "abstract"

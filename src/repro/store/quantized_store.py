@@ -14,23 +14,41 @@ quantized. What happens next is the ``eager`` knob:
     reconstructed on device by the Pallas ``dequant_int8`` kernel (int4
     unpacks first) — the dequant rides the H2D transfer the swap-in pays
     anyway;
-  * ``eager=False`` (the FUSED path, ROADMAP (f)): quantized leaves come
-    back as :class:`~repro.kernels.qtensor.QuantizedTensor` — fp is NEVER
-    materialized for them. Linear consumers stream the quantized tiles
-    straight through the fused dequant-matmul (kernels/swap_linear_q.py),
-    so HBM->VMEM DMA and the VMEM weight window also shrink 2-4x; other
-    consumers dequantize per use. Residency is genuinely the quantized
-    payload, which is what the ledger charges — raising effective cache
-    capacity by the same factor.
+  * ``eager=False`` (the FUSED path, ROADMAP (f)): leaves whose consumers
+    route through ``models/layers.linear`` — 2-D matmul weights under a
+    fused-routable key (:data:`FUSED_STREAM_KEYS`) — come back as
+    :class:`~repro.kernels.qtensor.QuantizedTensor`: fp is NEVER
+    materialized for them; they stream straight through the fused
+    dequant-matmul (kernels/swap_linear_q.py), so HBM->VMEM DMA and the
+    VMEM weight window also shrink 2-4x. Leaves the fused kernel CANNOT
+    stream (conv stacks, 3-D expert einsums, embeddings) are dequantized
+    HERE, on the loader thread — dequant-at-use on the executor would
+    serialize the dequant into the compute phase of every pass, which is
+    exactly the fused-path overlap gap this store used to have. The I/O
+    win (quantized bytes on the storage channel) applies to every leaf
+    either way.
+
+Pipeline contract (the PR 6 fix, asserted by tests/test_overlap_timeline):
+the ENTIRE quantized payload is forced host-resident by one sequential
+read at the top of ``read_unit`` — the old code memmapped the file and let
+the carrier bytes fault in lazily inside the device put, so the host read
+of block i+1 rode on the dispatch stage instead of overlapping block i's
+compute. Every stage (read -> unpack -> dispatch, including the device-put
+flush) runs and COMPLETES on the loader thread; the executor only ever
+waits on a finished unit. In lazy mode the non-streamable dequant is
+NUMPY on the loader ("unpack") — one device put per leaf, no per-leaf
+device-op storm on the swap-in critical path.
 
 Accounting (tested contract):
   * ``io_bytes`` / ``SwapStats.bytes_swapped`` — the QUANTIZED payload size
     (what actually crossed the storage channel);
-  * ``ledger_bytes`` — also the quantized size. With ``eager=False`` this
-    is literal (the payload IS the resident unit); with ``eager=True`` it
-    remains the PR 2 modeling convention (the repro materializes the fp
-    tree as the execution artifact and reports that side as
-    ``SwapStats.bytes_logical`` so nothing is hidden);
+  * ``ledger_bytes`` — with ``eager=True`` the stored (quantized) size, the
+    PR 2 modeling convention (the repro materializes the fp tree as the
+    execution artifact and reports that side as ``SwapStats.bytes_logical``
+    so nothing is hidden); with ``eager=False`` the HONEST mixed residency:
+    quantized payload + scales for QuantizedTensor leaves, logical fp bytes
+    for loader-dequantized leaves — so the planner packs against what the
+    ledger will really hold;
   * ``quantized_bytes`` — bytes delivered still-quantized (lazy mode only);
   * ``nbytes`` stays LOGICAL (dequantized) — partitioning and block-size
     reasoning are unchanged (the planner separately consults
@@ -56,9 +74,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.qtensor import FUSED_WEIGHT_KEYS
 from repro.store.base import BlockStore, UnitRead
 
 MIN_QUANT_SIZE = 1024       # elements; smaller leaves are stored raw
+
+# keys whose 2-D weights stream through the fused dequant-matmul and may
+# therefore stay quantized-resident; "w" is the generic fc weight key of the
+# vision models, whose consumer is also models/layers.linear
+FUSED_STREAM_KEYS = FUSED_WEIGHT_KEYS | {"w"}
 
 
 @dataclass(frozen=True)
@@ -69,7 +93,9 @@ class QLeaf:
     is quantized [rows, cols] (``rows`` = LOGICAL rows of the channel grid;
     the int4 carrier holds ceil(rows/2) payload rows) at ``offset`` with
     fp32 [cols] scales at ``scale_offset``. ``dtype`` is the ORIGINAL dtype
-    dequant restores."""
+    dequant restores. ``fusable`` marks leaves the fused kernel can stream
+    still-quantized (2-D, key in :data:`FUSED_STREAM_KEYS`); in lazy mode
+    every other quantized leaf is dequantized on the loader thread."""
     offset: int
     nbytes: int
     shape: Tuple[int, ...]
@@ -77,12 +103,14 @@ class QLeaf:
     scale_offset: int = -1
     rows: int = 0
     cols: int = 0
+    fusable: bool = False
 
 
 @dataclass
 class QuantMeta:
     leaves: List[QLeaf]
     stored_nbytes: int
+    resident_lazy: int = 0   # mixed residency of the eager=False read (bytes)
 
 
 class QuantizedStore(BlockStore):
@@ -105,10 +133,11 @@ class QuantizedStore(BlockStore):
 
     # ------------------------------------------------------------ build
     def _write_unit(self, name: str, params: dict) -> None:
+        from repro.compat import tree_flatten_with_path
         from repro.core.skeleton import ALIGN, skeleton_of
         from repro.kernels.dequant import quantize_int4, quantize_int8
         quantize = quantize_int8 if self.bits == 8 else quantize_int4
-        leaves = jax.tree.leaves(params)
+        flat, _ = tree_flatten_with_path(params)
         # logical skeleton (nbytes/meta) WITHOUT materializing the flat fp
         # buffer — the payload below is this store's only serialization
         self.skeletons[name] = skeleton_of(params)
@@ -121,26 +150,34 @@ class QuantizedStore(BlockStore):
             return off
 
         qleaves: List[QLeaf] = []
-        for leaf in leaves:
+        resident_lazy = 0
+        for path, leaf in flat:
             arr = np.ascontiguousarray(np.asarray(leaf))
             if (arr.ndim >= 2 and arr.size >= self.min_quant_size
                     and jnp.issubdtype(jnp.dtype(arr.dtype), jnp.floating)):
+                key = getattr(path[-1], "key", None) if path else None
+                fusable = arr.ndim == 2 and key in FUSED_STREAM_KEYS
                 q, scales = quantize(arr)
                 off = put(q.tobytes())
                 soff = put(scales.tobytes())
                 rows = int(np.prod(arr.shape[:-1]))
                 qleaves.append(QLeaf(off, q.nbytes, tuple(arr.shape),
-                                     str(arr.dtype), soff, rows, q.shape[1]))
+                                     str(arr.dtype), soff, rows, q.shape[1],
+                                     fusable))
+                resident_lazy += (q.nbytes + scales.nbytes if fusable
+                                  else arr.nbytes)
             else:
                 off = put(arr.tobytes())
                 qleaves.append(QLeaf(off, arr.nbytes, tuple(arr.shape),
                                      str(arr.dtype)))
+                resident_lazy += arr.nbytes
         with open(self._path(name), "wb") as fh:
             fh.write(bytes(blob))
-        self._qmeta[name] = QuantMeta(qleaves, len(blob))
+        self._qmeta[name] = QuantMeta(qleaves, len(blob), resident_lazy)
 
     # ------------------------------------------------------------ read
     def read_unit(self, name: str) -> UnitRead:
+        from repro.kernels.dequant import unpack_int4
         from repro.kernels.ops import dequant_int8
         from repro.kernels.qtensor import QuantizedTensor
         from repro.kernels.ref import unpack_int4_ref
@@ -148,39 +185,91 @@ class QuantizedStore(BlockStore):
         if skel.nbytes == 0:
             return self._empty_unit(name)
         meta = self._qmeta[name]
+        lazy = not self.eager
         t0 = time.perf_counter()
-        buf = np.memmap(self._path(name), dtype=np.uint8, mode="r")
+        # read: ONE sequential buffered read forces the whole carrier payload
+        # host-resident on the loader thread — a memmap here would defer the
+        # storage traffic to page faults inside the device puts below, where
+        # it can no longer overlap the executor (module docstring, "Pipeline
+        # contract").
+        buf = np.fromfile(self._path(name), dtype=np.uint8)
         t1 = time.perf_counter()
-        leaves = []
-        qbytes = 0
+        # unpack: host-side work over the payload. Raw and streamable leaves
+        # are pure views; in lazy mode the quantized leaves the fused kernel
+        # CANNOT stream dequantize here in numpy — host FLOPs on the
+        # otherwise-idle loader core, one device put per leaf, instead of a
+        # per-leaf device-op storm or dequant-at-use inside executor compute.
+        host: list = []
         for ql in meta.leaves:
             dt = jnp.dtype(ql.dtype)
-            if ql.scale_offset < 0:            # raw leaf: view + one DMA
-                view = buf[ql.offset:ql.offset + ql.nbytes].view(dt.type)
-                leaves.append(jnp.asarray(view.reshape(ql.shape)))
+            if ql.scale_offset < 0:            # raw leaf
+                host.append((ql, buf[ql.offset:ql.offset + ql.nbytes]
+                             .view(dt.type).reshape(ql.shape), None))
                 continue
-            # quantized leaf: transfer the payload + scales, keep or dequant
-            q = jnp.asarray(buf[ql.offset:ql.offset + ql.nbytes]
-                            .view(np.int8).reshape(-1, ql.cols))
-            s = jnp.asarray(buf[ql.scale_offset:ql.scale_offset + 4 * ql.cols]
-                            .view(np.float32))
-            if not self.eager:                 # fused path: stay quantized
+            qv = buf[ql.offset:ql.offset + ql.nbytes] \
+                .view(np.int8).reshape(-1, ql.cols)
+            sv = buf[ql.scale_offset:ql.scale_offset + 4 * ql.cols] \
+                .view(np.float32)
+            if lazy and not ql.fusable:
+                vals = unpack_int4(qv, ql.rows) if self.bits == 4 else qv
+                # one fused multiply pass (int8 x scales -> fp32 out); the
+                # naive astype()*astype() chain costs 3 full-size copies
+                fp = np.multiply(vals, sv[None, :], dtype=np.float32)
+                if dt.type is not np.float32:
+                    fp = fp.astype(dt.type)
+                host.append((ql, fp.reshape(ql.shape), None))
+            else:
+                host.append((ql, qv, sv))
+        t2 = time.perf_counter()
+        # dispatch: host -> device puts (eager mode keeps the seed's
+        # on-device Pallas dequant — it rides the H2D transfer), flushed
+        # HERE so the executor never inherits loader work. All leaves go up
+        # in ONE batched jax.device_put — per-call dispatch overhead
+        # (~100-200us) over dozens of leaves is the single largest loader
+        # cost after the dequant itself
+        arrs: list = []
+        for _, qv, sv in host:
+            arrs.append(qv)
+            if sv is not None:
+                arrs.append(sv)
+        dev = iter(jax.device_put(arrs))
+        leaves = []
+        qbytes = 0
+        for ql, qv, sv in host:
+            q = next(dev)
+            if sv is None:
+                leaves.append(q)
+                continue
+            s = next(dev)
+            if lazy:                           # fused path: stay quantized
                 leaves.append(QuantizedTensor(q, s, ql.shape, ql.dtype,
                                               self.bits))
                 qbytes += ql.nbytes + 4 * ql.cols
                 continue
             vals = unpack_int4_ref(q, ql.rows) if self.bits == 4 else q
-            leaves.append(dequant_int8(vals, s, dt.type).reshape(ql.shape))
+            leaves.append(dequant_int8(vals, s, jnp.dtype(ql.dtype).type)
+                          .reshape(ql.shape))
         tree = jax.tree.unflatten(skel.treedef, leaves)
-        t2 = time.perf_counter()
+        jax.block_until_ready(tree)
+        t3 = time.perf_counter()
         stored = meta.stored_nbytes
-        return UnitRead(tree, stored, stored, t1 - t0, t2 - t1,
-                        quantized_bytes=qbytes)
+        ledger = meta.resident_lazy if lazy else stored
+        stages = (("read", t0, t1), ("unpack", t1, t2), ("dispatch", t2, t3))
+        return UnitRead(tree, stored, ledger, t1 - t0, t3 - t1,
+                        quantized_bytes=qbytes, stages=stages)
 
     # ------------------------------------------------------------ sizes
     def stored_nbytes(self, name: str) -> int:
         return self._qmeta[name].stored_nbytes if name in self._qmeta \
             else self.skeletons[name].nbytes
+
+    def resident_nbytes(self, name: str) -> int:
+        """Eager mode holds the stored (quantized) payload convention; lazy
+        mode holds the honest mixed residency (QuantizedTensor payloads for
+        fusable leaves, restored fp for everything else)."""
+        if not self.eager and name in self._qmeta:
+            return self._qmeta[name].resident_lazy
+        return self.stored_nbytes(name)
 
     def meta_bytes(self) -> int:
         """Skeletons plus the per-leaf quant refs (still KB-scale/model)."""

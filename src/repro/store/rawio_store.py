@@ -45,11 +45,13 @@ class RawIOStore(BlockStore):
         staged = np.frombuffer(raw, np.uint8).copy()   # staging copy
         t1 = time.perf_counter()
         host_tree = assemble_np(skel, staged)
-        dev = jax.tree.map(jnp.asarray, host_tree)     # device transfer
+        t2 = time.perf_counter()
+        dev = jax.device_put(host_tree)                # device transfer
         if self.gpu_dispatch:
             dev = jax.tree.map(jnp.array, dev)         # dispatch copy (.to('cuda'))
             extra = 3 * n
         else:
             extra = 2 * n
-        t2 = time.perf_counter()
-        return UnitRead(dev, n, extra, t1 - t0, t2 - t1)
+        t3 = time.perf_counter()
+        stages = (("read", t0, t1), ("unpack", t1, t2), ("dispatch", t2, t3))
+        return UnitRead(dev, n, extra, t1 - t0, t3 - t1, stages=stages)

@@ -1,0 +1,196 @@
+"""Per-stage swap timeline + the fused-path overlap regression tests.
+
+PR 6's tentpole: every swap-in is logged as (stage, start, end) spans —
+"read" / "unpack" / "dispatch" on the loader thread, "wait" / "exec" on the
+executor — so a serialization point is attributable to the stage that
+caused it. The regression these tests pin down: on the fused (quantized-
+resident) path at prefetch depth m >= 2, the HOST READ of block i+1's
+carrier bytes must genuinely overlap block i's compute, and the pipelined
+pass must beat the serial (m=1) one.
+
+Timing-sensitive assertions retry a few times before failing: on a noisy
+shared CPU a single pass can schedule pathologically, but the overlap must
+show up in SOME attempt if the pipeline works at all.
+"""
+import tempfile
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.bench_overhead import _evict_page_cache
+from repro.core.cost_model import DelayModel, LayerInfo
+from repro.core.partition import PartitionPlanner
+from repro.core.runtime import SwappedSequential
+from repro.core.swap_engine import BlockCache, MemoryLedger, SwapStats
+from repro.models import vision
+from repro.store import build_store
+
+RETRIES = 3
+
+
+# ------------------------------------------------------------ span algebra
+def test_overlap_seconds_algebra():
+    st = SwapStats()
+    st.timeline = [("read", 0.0, 1.0), ("exec", 0.5, 2.0),
+                   ("read", 3.0, 4.0), ("exec", 3.5, 3.75)]
+    assert st.stage_seconds("read") == pytest.approx(2.0)
+    assert st.overlap_seconds("read", "exec") == pytest.approx(0.75)
+    assert st.overlap_seconds("read", "wait") == 0.0
+    assert st.stage_spans("exec") == [(0.5, 2.0), (3.5, 3.75)]
+
+
+def test_overlap_seconds_merges_overlapping_spans():
+    st = SwapStats()
+    # two loader spans that themselves overlap must not double-count
+    st.timeline = [("read", 0.0, 2.0), ("read", 1.0, 3.0),
+                   ("exec", 0.0, 3.0)]
+    assert st.overlap_seconds("read", "exec") == pytest.approx(3.0)
+
+
+# ------------------------------------------------------------ store stages
+@pytest.mark.parametrize("backend,opts", [
+    ("mmap", {}),
+    ("rawio", {}),
+    ("quant", {"bits": 8, "eager": True}),
+    ("quant", {"bits": 4, "eager": False}),
+    ("directio", {}),
+])
+def test_read_unit_emits_well_formed_stages(backend, opts):
+    rng = np.random.default_rng(0)
+    units = [("u0", {"w": rng.standard_normal((64, 128)).astype(np.float32),
+                     "b": rng.standard_normal(128).astype(np.float32)})]
+    with tempfile.TemporaryDirectory() as d:
+        store = build_store(units, d, backend=backend, **opts)
+        r = store.read_unit("u0")
+    assert [s for s, _, _ in r.stages] == ["read", "unpack", "dispatch"]
+    times = [t for _, s, e in r.stages for t in (s, e)]
+    assert times == sorted(times)           # contiguous, monotone
+    # the recorded io/asm split must agree with the spans
+    assert r.io_s == pytest.approx(r.stages[0][2] - r.stages[0][1], abs=1e-9)
+
+
+# ------------------------------------------------------------ pipeline
+def _fc_stack(n=10, dim=512, seed=0):
+    layers = [vision.Layer("fc", dim, dim) for _ in range(n)]
+    params = vision.init_convnet(layers, jax.random.key(seed))
+    return layers, params
+
+
+def _run_fused(layers, params, workdir, m, batch=64, unit_delay_s=0.0):
+    units = [(f"fc{i:02d}", p) for i, p in enumerate(params)]
+    dim = layers[0].cin
+    total = sum(np.asarray(x).nbytes
+                for p in params for x in jax.tree.leaves(p))
+    infos = [LayerInfo(f"fc{i:02d}",
+                       sum(np.asarray(x).nbytes for x in jax.tree.leaves(p)),
+                       len(jax.tree.leaves(p)), 2.0 * batch * dim * dim)
+             for i, p in enumerate(params)]
+    ledger = MemoryLedger(int(total))
+    sw = SwappedSequential(
+        units, lambda i, p, xx: vision.apply_layer(layers[i], p, xx),
+        workdir, prefetch_depth=m, ledger=ledger,
+        cache=BlockCache(0, ledger),
+        store_backend="quant", precision="int4", fused=True)
+    # plan with the store's own measured channel cost (the bench does the
+    # same): mmap-profiled alpha under-costs fused swap-ins and the search
+    # then under-pipelines exactly the path this file regression-tests
+    sw.partition_with(infos, int(total * 0.5),
+                      DelayModel().calibrated(sw.store))
+    x = jax.random.normal(jax.random.key(1), (batch, dim))
+    sw.forward(x)                           # warm: jit compiles
+    if unit_delay_s:
+        # inject deterministic per-unit storage latency (a sleep releases
+        # the GIL exactly like a real I/O wait): the pipeline property —
+        # hide swap-in waits behind compute — becomes assertable without
+        # depending on the host disk, whose virtualized page cache makes
+        # "cold" reads memcpy-fast and leaves nothing for depth m to hide
+        orig = sw.store.read_unit
+        sw.store.read_unit = lambda name: (time.sleep(unit_delay_s),
+                                           orig(name))[1]
+    # evict the unit files' page-cache pages so the timed pass also pays
+    # whatever real storage I/O the host will give us (bench_overhead
+    # measures cold the same way)
+    _evict_page_cache(sw.store)
+    sw.engine.stats.__init__()
+    _, st = sw.forward(x)
+    stats = sw.engine.stats
+    sw.close()
+    return st, stats
+
+
+def test_fused_timeline_has_loader_and_executor_events():
+    layers, params = _fc_stack()
+    with tempfile.TemporaryDirectory() as d:
+        _, stats = _run_fused(layers, params, d, m=2)
+    stages = {ev[0] for ev in stats.timeline}
+    assert {"read", "unpack", "dispatch", "wait", "exec"} <= stages
+    # one read span per swapped-in unit, one exec span per block
+    assert len(stats.stage_spans("read")) == len(layers)
+    assert len(stats.stage_spans("exec")) > 1
+
+
+def test_fused_host_read_overlaps_compute():
+    """THE tentpole regression: at m=2 the host read of block i+1's carrier
+    bytes runs inside block i's exec span — the old fused path deferred the
+    read to page faults inside the device put and showed ~zero overlap."""
+    layers, params = _fc_stack()
+    for attempt in range(RETRIES):
+        with tempfile.TemporaryDirectory() as d:
+            _, stats = _run_fused(layers, params, d, m=2)
+        hidden = stats.overlap_seconds("read", "exec")
+        if hidden > 0.0:
+            return
+    pytest.fail(f"no read/exec overlap in {RETRIES} fused m=2 passes "
+                f"(timeline: {sorted({e[0] for e in stats.timeline})})")
+
+
+def test_fused_m2_latency_beats_m1():
+    """Pipelining must pay on the fused path: with per-unit storage latency
+    the depth-2 pass hides swap-in waits behind compute and beats the
+    serial (m=1) pass by roughly the hidden compute time. The latency is
+    INJECTED (5 ms per unit, a GIL-releasing sleep — exactly the shape of
+    a real storage wait) so the assertion exercises the pipeline property
+    this repo controls, not the benchmark host's disk: on a virtualized
+    single-core runner, "cold" reads land in the hypervisor's page cache
+    and degenerate to pure CPU memcpy, which a depth-m pipeline cannot
+    hide — and the serial pass legitimately ties. min-of-3 per arm sheds
+    scheduler noise on top."""
+    layers, params = _fc_stack(dim=1024)
+
+    def best(m):
+        lat = []
+        for _ in range(RETRIES):
+            with tempfile.TemporaryDirectory() as d:
+                st, _ = _run_fused(layers, params, d, m=m,
+                                   unit_delay_s=0.005)
+            lat.append(st["latency_s"])
+        return min(lat)
+
+    m1, m2 = best(1), best(2)
+    assert m2 < m1, f"fused m2 ({m2*1e3:.1f} ms) not below m1 ({m1*1e3:.1f} ms)"
+
+
+# ------------------------------------------------------------ planner search
+def test_planner_deepens_pipeline_when_budget_is_slack():
+    """With the whole model admitted by the budget (the fused-path regime),
+    the paper's first-feasible rule returns n == m and leaves the cold first
+    block — half the model — unhidable. The n-search must instead trade the
+    exposed first block against kappa and pick a deeper plan."""
+    infos = [LayerInfo(f"l{i}", int(1e8), 1, 6e9) for i in range(8)]
+    dm = DelayModel(alpha=1.2e-9, beta=0.0, gamma=2e-11, eta=0.0)
+    planner = PartitionPlanner(infos, dm, m=2)
+    plan, _ = planner.best_partition(budget=int(1e10))   # admits everything
+    assert plan.n_blocks > 2                 # paper's rule would stop at 2
+    assert plan.m == 2
+
+
+def test_planner_kappa_bounds_block_count():
+    """A large per-block fixed cost must stop the n-search: with kappa
+    dominating, finer plans only add overhead."""
+    infos = [LayerInfo(f"l{i}", int(1e8), 1, 6e9) for i in range(8)]
+    dm = DelayModel(alpha=1.2e-9, beta=0.0, gamma=2e-11, eta=0.0, kappa=0.5)
+    planner = PartitionPlanner(infos, dm, m=2)
+    plan, _ = planner.best_partition(budget=int(1e10))
+    assert plan.n_blocks == 2

@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Fail when the prose drifts from the code it describes.
+
+Checks, over README.md and docs/*.md:
+
+  * every repo file path referenced in backticks or markdown links exists
+    (``src/repro/core/runtime.py``, ``docs/BENCHMARKS.md``, ...), including
+    dotted module spellings (``repro.launch.serve`` -> src/repro/launch/
+    serve.py) and ``path.py: member`` / ``module.attr`` suffixes;
+  * every ``--flag`` the docs mention is actually defined by some
+    ``add_argument`` call in src/, benchmarks/, or tools/;
+  * every backend key in ``STORE_BACKENDS`` is mentioned in README.md and
+    docs/ARCHITECTURE.md (a new backend must be documented; a renamed one
+    fails the path/flag checks on the stale side).
+
+Docs rot silently: a rename refactor updates every import but no grep hits
+the prose. This runs in CI next to the test suite so the rename PR is the
+one that fixes its own docs. Heuristic by design — only tokens that LOOK
+like repo paths or flags are validated; plain prose is never parsed.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+CODE_DIRS = ["src", "benchmarks", "tools", "tests"]
+
+# prefixes a backticked token must start with to be treated as a repo path
+PATH_PREFIXES = ("src/", "benchmarks/", "tests/", "docs/", "results/",
+                 "tools/", ".github/", "repro.", "benchmarks.")
+# flags owned by external tools the docs may legitimately mention
+EXTERNAL_FLAGS = {"--smoke-test"}  # (none currently; keep the hook)
+
+
+def backtick_tokens(text: str) -> list[str]:
+    # inline code spans + fenced code blocks, then link targets
+    toks = re.findall(r"`([^`\n]+)`", text)
+    for block in re.findall(r"```[a-z]*\n(.*?)```", text, re.S):
+        toks.extend(block.split())
+    toks.extend(re.findall(r"\]\(([^)#\s]+)\)", text))
+    return toks
+
+
+def defined_flags() -> set[str]:
+    flags: set[str] = set()
+    for d in CODE_DIRS:
+        for py in (ROOT / d).rglob("*.py"):
+            try:
+                tree = ast.parse(py.read_text())
+            except SyntaxError:
+                continue
+            for node in ast.walk(tree):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "add_argument"):
+                    for a in node.args:
+                        if (isinstance(a, ast.Constant)
+                                and isinstance(a.value, str)
+                                and a.value.startswith("--")):
+                            flags.add(a.value)
+    return flags
+
+
+def resolve_path(tok: str) -> bool:
+    """True if ``tok`` names something real in the repo."""
+    tok = tok.strip().rstrip(".,;:")
+    if tok.startswith(("repro.", "benchmarks.")):  # python -m spelling
+        mod = tok.split()[0]
+        rel = mod.replace(".", "/")
+        base = "src/" if mod.startswith("repro.") else ""
+        return ((ROOT / f"{base}{rel}.py").exists()
+                or (ROOT / base / rel).is_dir())
+    candidates = [tok, tok.split(":")[0].strip()]
+    # `store/base.py` style (relative to a dir named in the section) and
+    # `kernels/swap_linear.vmem_bytes` style (module.attr) both reduce to:
+    # strip a trailing .member if the base resolves
+    if "." in tok.rsplit("/", 1)[-1]:
+        stem = tok[:tok.rfind(".")]
+        candidates += [stem, stem + ".py"]
+    for c in candidates:
+        c = c.strip().rstrip(".,;:")
+        if not c:
+            continue
+        if (ROOT / c).exists():
+            return True
+        # paths quoted relative to src/repro/ inside module-map sections
+        if (ROOT / "src" / "repro" / c).exists():
+            return True
+    return False
+
+
+def looks_like_path(tok: str) -> bool:
+    if " " in tok and not tok.startswith(("repro.", "benchmarks.")):
+        return False
+    if any(ch in tok for ch in "{}*|\\()<>="):
+        return False
+    return tok.startswith(PATH_PREFIXES) or (
+        "/" in tok and tok.rsplit("/", 1)[-1].count(".") >= 1
+        and not tok.startswith(("http", "0.", "1.")))
+
+
+def main() -> int:
+    flags = defined_flags()
+    errors: list[str] = []
+    readme = (ROOT / "README.md").read_text()
+    arch = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
+
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        rel = doc.relative_to(ROOT)
+        for tok in backtick_tokens(text):
+            tok = tok.strip()
+            if looks_like_path(tok) and not resolve_path(tok):
+                errors.append(f"{rel}: stale path reference `{tok}`")
+            for flag in re.findall(r"(?<![\w-])(--[a-z][a-z0-9-]+)", tok):
+                if flag not in flags and flag not in EXTERNAL_FLAGS:
+                    errors.append(f"{rel}: flag `{flag}` is not defined by "
+                                  f"any add_argument in {CODE_DIRS}")
+
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.store import STORE_BACKENDS
+    for backend in STORE_BACKENDS:
+        for name, text in [("README.md", readme),
+                           ("docs/ARCHITECTURE.md", arch)]:
+            if not re.search(rf"`{backend}`", text):
+                errors.append(f"{name}: store backend `{backend}` "
+                              f"(STORE_BACKENDS) is undocumented")
+
+    if errors:
+        print(f"docs drift: {len(errors)} problem(s)")
+        for e in sorted(set(errors)):
+            print(f"  {e}")
+        return 1
+    n = sum(len(backtick_tokens(d.read_text())) for d in DOC_FILES)
+    print(f"docs drift: OK ({len(DOC_FILES)} docs, {n} code tokens, "
+          f"{len(flags)} known flags, {len(STORE_BACKENDS)} backends)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
