@@ -1,0 +1,183 @@
+"""Decode-throughput point: continuous batching over the paged KV cache
+(`serving/batch_engine.py`) vs serial per-sequence decode, both through the
+SAME swapped weight pipeline.
+
+Per-sequence decode pays the model's full swap-in cost PER TOKEN PER
+SEQUENCE; a batched decode step streams the weight blocks once and
+amortizes them over every active sequence
+(:meth:`~repro.core.runtime.SwappedModel.decode_step_paged`). The two arms
+serve the IDENTICAL request set:
+
+  * ``b1`` — ``max_batch=1``: the engine degenerates to one-sequence-at-a-
+    time decode (the pre-batching serving behaviour);
+  * ``b8`` — ``max_batch=8``: all requests co-resident, one weight stream
+    per step.
+
+Reported per arm: tokens/s (overall and decode-only), mean batch occupancy,
+KV page-pool peak, and the shared-ledger peak vs the budget (weights + KV
+pages under ONE `MemoryLedger` — ``budget_ok`` must hold in both arms).
+Headline: ``speedup_b8_over_b1`` (the batching win; the CI gate holds it
+above 2x) and ``decode_speedup_b8_over_b1`` (the decode-phase-only ratio,
+closer to the ideal B x).
+
+Standalone CLI for the CI smoke point::
+
+    python -m benchmarks.bench_decode
+    # -> results/BENCH_decode.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, emit
+from repro.configs import ARCHS
+from repro.core.cost_model import DelayModel
+from repro.core.runtime import SwappedModel
+from repro.models.transformer import Model
+from repro.serving.batch_engine import BatchDecodeEngine
+from repro.serving.engine import Request
+from repro.serving.paged_kv import PagedKVCache, page_bytes_for
+
+ARCH = "qwen2.5-3b"
+MB = 1024 * 1024
+BUDGET = 12 * MB           # ONE ledger budget for weight blocks + KV pages
+PAGE_TOKENS = 4
+
+
+def _build():
+    cfg = dataclasses.replace(ARCHS[ARCH].reduced(), dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n: int, prompt_len: int, max_new: int):
+    rng = np.random.default_rng(0)
+    return [Request(i, list(map(int, rng.integers(0, cfg.vocab_size,
+                                                  prompt_len))),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _run_arm(cfg, model, params, reqs, *, max_batch: int,
+             page_tokens: int) -> dict:
+    """One decode arm over a fresh swapped model + page pool. The pool is
+    sized for the whole request set so neither arm preempts — the point is
+    the batching amortization, not page pressure."""
+    max_ctx = max(len(r.prompt) + r.max_new_tokens for r in reqs)
+    pages_per_seq = -(-max_ctx // page_tokens)
+    kv_bytes = len(reqs) * pages_per_seq * page_bytes_for(cfg, page_tokens)
+    with tempfile.TemporaryDirectory() as d:
+        sm = SwappedModel(model, params, d, mode="snet", budget=BUDGET)
+        sm.partition(budget=BUDGET - kv_bytes, dm=DelayModel(),
+                     batch=2, seq=16)
+        kv = PagedKVCache.for_budget(cfg, sm.engine.ledger, kv_bytes,
+                                     page_tokens=page_tokens)
+        be = BatchDecodeEngine(sm, kv, max_batch=max_batch)
+        for r in reqs:
+            be.submit(r)
+        be.run_all()
+        st = be.stats()
+        peak = sm.engine.ledger.peak
+        sm.close()
+    admissions = len(reqs) + int(st["preemptions"])
+    decode_tokens = st["tokens_emitted"] - admissions
+    return {
+        "max_batch": max_batch,
+        "tokens_emitted": int(st["tokens_emitted"]),
+        "decode_steps": int(st["decode_steps"]),
+        "preemptions": int(st["preemptions"]),
+        "mean_occupancy": st["mean_occupancy"],
+        "tok_per_s": st["tok_per_s"],
+        "decode_tok_per_s": decode_tokens / max(st["decode_s"], 1e-9),
+        "prefill_s": st["prefill_s"],
+        "decode_s": st["decode_s"],
+        "kv_pages_peak": int(st["kv_pages_peak"]),
+        "kv_pool_pages": kv.max_pages,
+        "kv_page_bytes": kv.page_bytes,
+        "kv_bytes": kv_bytes,
+        "peak_resident_mb": peak / 1e6,
+        "budget_ok": bool(peak <= BUDGET),
+        "outputs_digest": sum(t for r in reqs for t in r.output) % (1 << 31),
+    }
+
+
+def run(n_req: int, prompt_len: int, max_new: int,
+        page_tokens: int) -> dict:
+    cfg, model, params = _build()
+    # warm the jit caches at BOTH batch shapes first (the prefill trace and
+    # the B=1 / B=n decode traces), so neither measured arm carries the
+    # other's compile cost — without this the first arm eats all shared
+    # compilation and the speedup is compile skew, not batching
+    for mb in (1, n_req):
+        _run_arm(cfg, model, params, _requests(cfg, n_req, prompt_len, 2),
+                 max_batch=mb, page_tokens=page_tokens)
+    arms = {}
+    for label, mb in (("b1", 1), ("b8", 8)):
+        reqs = _requests(cfg, n_req, prompt_len, max_new)
+        arms[label] = _run_arm(cfg, model, params, reqs,
+                               max_batch=mb, page_tokens=page_tokens)
+    # batching must be invisible in the outputs: both arms decode the same
+    # requests greedily, so the emitted token streams are identical
+    assert arms["b1"]["outputs_digest"] == arms["b8"]["outputs_digest"], \
+        "b1 and b8 arms emitted different tokens"
+    b1, b8 = arms["b1"], arms["b8"]
+    return {
+        "arch": ARCH,
+        "budget_mb": BUDGET / 1e6,
+        "page_tokens": page_tokens,
+        "requests": {"n": n_req, "prompt_len": prompt_len,
+                     "max_new": max_new},
+        "arms": arms,
+        "speedup_b8_over_b1": (b8["tok_per_s"] / b1["tok_per_s"]
+                               if b1["tok_per_s"] else 0.0),
+        "decode_speedup_b8_over_b1": (
+            b8["decode_tok_per_s"] / b1["decode_tok_per_s"]
+            if b1["decode_tok_per_s"] else 0.0),
+    }
+
+
+def write_report(report: dict, path: str = None) -> str:
+    path = path or os.path.join(RESULTS_DIR, "BENCH_decode.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--page-tokens", type=int, default=PAGE_TOKENS)
+    args = ap.parse_args()
+
+    report = run(args.requests, args.prompt_len, args.max_new,
+                 args.page_tokens)
+    for label, a in report["arms"].items():
+        emit(f"decode.{label}", a["decode_s"] * 1e6 / max(a["decode_steps"],
+                                                          1),
+             f"tok_per_s={a['tok_per_s']:.2f};"
+             f"decode_tok_per_s={a['decode_tok_per_s']:.2f};"
+             f"occupancy={a['mean_occupancy']:.2f};"
+             f"kv_pages_peak={a['kv_pages_peak']};"
+             f"peak_mb={a['peak_resident_mb']:.1f};"
+             f"budget_ok={a['budget_ok']}")
+    emit("decode.speedup", 0.0,
+         f"b8/b1={report['speedup_b8_over_b1']:.2f}x;"
+         f"decode_only={report['decode_speedup_b8_over_b1']:.2f}x")
+    path = write_report(report)
+    print(f"# decode point -> {path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

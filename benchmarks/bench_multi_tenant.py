@@ -10,6 +10,14 @@ preemption. Reports p50/p99 per priority class for both arms, the ledger
 peak vs the budget (must never exceed), and the headline ratio
 ``hi_p99_speedup`` = serialized hi-class p99 / scheduled hi-class p99.
 
+A third, decode-heavy arm mixes traffic kinds: a burst of low-priority
+GENERATION requests (continuous-batching decode through the paged KV cache,
+``submit_generate``) with high-urgency prefill requests landing mid-decode.
+Decode drivers yield at decode-STEP boundaries — the decode analogue of
+block-boundary preemption — so the hi class overtakes without waiting for
+any sequence to retire; reported per class (``gen_lo`` / ``hi``) plus the
+per-model engine stats (occupancy, preemptions, KV-pool hygiene).
+
 Standalone CLI for the CI smoke point::
 
     python -m benchmarks.bench_multi_tenant --smoke
@@ -32,6 +40,7 @@ from repro.configs import ARCHS
 from repro.core.multi_model import MultiModelRuntime
 from repro.core.serving_scheduler import ServingScheduler
 from repro.models.transformer import Model
+from repro.serving.engine import Request
 
 ARCH_SET = ("qwen2.5-3b", "gemma2-9b")
 PRIO_LO, PRIO_HI = 1.0, 8.0
@@ -41,6 +50,9 @@ PRIO_LO, PRIO_HI = 1.0, 8.0
 BUDGET = 10 * 1024 * 1024
 SEQ = 32
 BATCH = 2
+# the decode-heavy arm also reserves KV pages out of the shared budget, so
+# it runs under a larger envelope to keep several weight blocks per pass
+BUDGET_DECODE = 16 * 1024 * 1024
 
 
 def _build_models():
@@ -117,6 +129,67 @@ def _run_arm(models, workload, executors: int, preempt: bool,
     }
 
 
+def _run_decode_heavy(models, n_gen: int, n_hi: int, max_new: int = 6,
+                      hi_delay_s: float = 0.05) -> dict:
+    """Mixed prefill/decode traffic through the priority-aware scheduler:
+    low-priority generation requests decode in continuous batches under the
+    shared ledger (weights + KV pages, ONE budget), and high-urgency prefill
+    requests landing behind them are served at the next decode-step
+    boundary — the driver yields the batch, the hi pass runs, the batch
+    resumes with its paged KV state intact."""
+    with tempfile.TemporaryDirectory() as d:
+        rt = MultiModelRuntime(BUDGET_DECODE, cache_frac=0.2, executors=2,
+                               kv_frac=0.25, page_tokens=4, max_batch=4)
+        for arch, (model, params, _) in models.items():
+            rt.add_model(arch, model, params, d)
+        rt.plan(batch=BATCH, seq=SEQ)
+        for arch, (_, _, batch) in models.items():
+            rt.forward(arch, batch)             # warm: trace/dispatch caches
+        sched = ServingScheduler(rt, executors=2, preempt=True)
+        rng = np.random.default_rng(7)
+        label_of, submitted = {}, []
+        for i in range(n_gen):
+            arch = ARCH_SET[i % len(ARCH_SET)]
+            cfg = models[arch][0].cfg
+            gr = Request(i, list(map(int, rng.integers(
+                0, cfg.vocab_size, 8))), max_new_tokens=max_new)
+            r = sched.submit_generate(arch, gr, priority=PRIO_LO)
+            label_of[r.rid] = "gen_lo"
+            submitted.append(r)
+        if hi_delay_s:
+            time.sleep(hi_delay_s)              # land mid-decode
+        for i in range(n_hi):
+            arch = ARCH_SET[i % len(ARCH_SET)]
+            r = sched.submit(arch, models[arch][2], priority=PRIO_HI)
+            label_of[r.rid] = "hi"
+            submitted.append(r)
+        for r in submitted:
+            r.wait(timeout=600)
+        engines = {a: rt.batch_engine(a) for a in ARCH_SET}
+        eng_stats = {a: e.stats() for a, e in engines.items()}
+        pool_clean = all(e.kv.pages_in_use == 0 for e in engines.values())
+        sched.shutdown()
+        st = rt.stats()
+        rt.close()
+    classes = {"gen_lo": [], "hi": []}
+    for r in submitted:
+        classes[label_of[r.rid]].append(r.latency_s * 1e3)
+    return {
+        "budget_mb": BUDGET_DECODE / 1e6,
+        "workload": {"gen_lo": n_gen, "hi": n_hi, "max_new": max_new},
+        "preemptions": sched.preemptions,
+        "peak_resident_mb": st["peak_resident_mb"],
+        "budget_ok": bool(st["peak_resident_mb"] * 1e6 <= BUDGET_DECODE),
+        "kv_pool_clean": pool_clean,
+        "classes": {k: _percentiles(v) for k, v in classes.items()},
+        "engines": {a: {"tokens_emitted": s["tokens_emitted"],
+                        "mean_occupancy": s["mean_occupancy"],
+                        "preemptions": s["preemptions"],
+                        "tok_per_s": s["tok_per_s"]}
+                    for a, s in eng_stats.items()},
+    }
+
+
 def run(n_lo: int, n_hi: int) -> dict:
     models = _build_models()
     workload = _workload(n_lo, n_hi)
@@ -131,6 +204,8 @@ def run(n_lo: int, n_hi: int) -> dict:
             "scheduled": _run_arm(models, workload, executors=2,
                                   preempt=True, honor_priority=True),
         },
+        "decode_heavy": _run_decode_heavy(models, n_gen=max(n_lo // 2, 2),
+                                          n_hi=max(n_hi, 2)),
     }
     ser = report["arms"]["serialized"]["classes"]["hi"]["p99_ms"]
     sch = report["arms"]["scheduled"]["classes"]["hi"]["p99_ms"]
@@ -172,6 +247,15 @@ def main() -> None:
                  f"budget_ok={a['budget_ok']}")
     emit("multi_tenant.hi_p99_speedup", 0.0,
          f"serialized/scheduled={report['hi_p99_speedup']:.2f}x")
+    dh = report["decode_heavy"]
+    for cls in ("hi", "gen_lo"):
+        c = dh["classes"][cls]
+        emit(f"multi_tenant.decode_heavy.{cls}", c["p99_ms"] * 1e3,
+             f"n={c['n']};p50_ms={c['p50_ms']:.1f};p99_ms={c['p99_ms']:.1f};"
+             f"preemptions={dh['preemptions']};"
+             f"peak_mb={dh['peak_resident_mb']:.1f};"
+             f"budget_ok={dh['budget_ok']};"
+             f"kv_pool_clean={dh['kv_pool_clean']}")
     path = write_report(report)
     print(f"# multi-tenant point -> {path}", flush=True)
 

@@ -12,9 +12,23 @@ Per {mmap, rawio, quant, fused, directio} x m{1,2,3} arm:
     wall clock is hardware-dependent, but a 2x regression must fail the
     job instead of sailing through as an uploaded artifact nobody reads.
 
+The baseline also carries a ``decode`` section (``bench_decode`` output,
+the continuous-batching point). Per {b1, b8} arm:
+
+  * ``tokens_emitted`` / ``decode_steps`` must match EXACTLY — greedy
+    decode over fixed requests is deterministic, so any drift means the
+    engine's admission/retirement schedule changed;
+  * ``tok_per_s`` may drift DOWN up to ``--latency-tol`` (throughput is
+    wall-clock; up is always fine);
+  * the fresh ``speedup_b8_over_b1`` must stay above ``DECODE_SPEEDUP_MIN``
+    — batching that no longer amortizes the weight stream is the one
+    regression this subsystem exists to prevent.
+
 A missing arm in the fresh output is itself a regression (the matrix
-silently shrank). ``--update`` rewrites the baseline from the fresh file
-(run it locally after an INTENTIONAL perf change and commit the result).
+silently shrank). ``--update`` MERGES the fresh section(s) into the
+baseline — each fresh file refreshes only the section it produces, so
+re-recording the swap-store matrix does not silently drop the decode
+point (run it locally after an INTENTIONAL perf change and commit).
 
 Exit status: 0 clean, 1 regression — wire it as a CI step after the bench.
 """
@@ -23,7 +37,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import shutil
 import sys
 from typing import Dict, List
 
@@ -32,6 +45,10 @@ from benchmarks.common import RESULTS_DIR
 BYTE_KEYS = ("bytes_swapped", "bytes_logical")
 LATENCY_KEYS = ("swap_in_ms",)
 ARMS = ("m1", "m2", "m3")
+DECODE_ARMS = ("b1", "b8")
+DECODE_EXACT_KEYS = ("tokens_emitted", "decode_steps")
+DECODE_RATE_KEYS = ("tok_per_s",)
+DECODE_SPEEDUP_MIN = 2.0
 
 
 def compare(baseline: Dict, fresh: Dict,
@@ -67,6 +84,53 @@ def compare(baseline: Dict, fresh: Dict,
                         f"{backend}.{m}.{k}: {b:.2f} -> {n:.2f} ms "
                         f"(+{(n / b - 1.0) * 100:.0f}% > "
                         f"+{latency_tol * 100:.0f}% tolerance)")
+    violations += compare_decode(baseline.get("decode"), fresh.get("decode"),
+                                 latency_tol)
+    return violations
+
+
+def compare_decode(base: Dict | None, new: Dict | None,
+                   latency_tol: float = 0.2) -> List[str]:
+    """Decode-point regressions. Token/step counts are deterministic and
+    must match exactly; throughput may only drift DOWN within tolerance;
+    the b8/b1 speedup is gated ABSOLUTELY (the fresh run must demonstrate
+    batching still amortizes, whatever the baseline recorded)."""
+    if base is None:
+        return []
+    if new is None:
+        return ["decode: section missing from fresh results"]
+    violations = []
+    for arm in DECODE_ARMS:
+        b, n = base["arms"].get(arm), new.get("arms", {}).get(arm)
+        if b is None:
+            continue
+        if n is None:
+            violations.append(f"decode.{arm}: missing from fresh results")
+            continue
+        for k in DECODE_EXACT_KEYS:
+            if n.get(k) != b.get(k):
+                violations.append(
+                    f"decode.{arm}.{k}: {b.get(k)} -> {n.get(k)} "
+                    f"(deterministic counts must match exactly)")
+        for k in DECODE_RATE_KEYS:
+            bv, nv = b.get(k), n.get(k)
+            if bv is None or nv is None:
+                continue
+            if nv < bv * (1.0 - latency_tol):
+                violations.append(
+                    f"decode.{arm}.{k}: {bv:.2f} -> {nv:.2f} tok/s "
+                    f"({(1.0 - nv / bv) * 100:.0f}% drop > "
+                    f"{latency_tol * 100:.0f}% tolerance)")
+        if not n.get("budget_ok", True):
+            violations.append(
+                f"decode.{arm}: ledger peak exceeded the budget "
+                f"({n.get('peak_resident_mb')} MB)")
+    sp = new.get("speedup_b8_over_b1", 0.0)
+    if sp < DECODE_SPEEDUP_MIN:
+        violations.append(
+            f"decode.speedup_b8_over_b1: {sp:.2f}x < "
+            f"{DECODE_SPEEDUP_MIN:.1f}x floor (batching no longer "
+            f"amortizes the weight stream)")
     return violations
 
 
@@ -76,6 +140,10 @@ def main() -> None:
                     default=os.path.join(RESULTS_DIR, "BENCH_baseline.json"))
     ap.add_argument("--fresh",
                     default=os.path.join(RESULTS_DIR, "BENCH_swap_store.json"))
+    ap.add_argument("--fresh-decode",
+                    default=os.path.join(RESULTS_DIR, "BENCH_decode.json"),
+                    help="bench_decode output attached as the fresh "
+                         "'decode' section (skipped when absent)")
     ap.add_argument("--latency-tol", type=float,
                     default=float(os.environ.get("BENCH_LATENCY_TOL", "0.2")),
                     help="allowed fractional swap-in latency growth "
@@ -87,14 +155,32 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.update:
-        shutil.copyfile(args.fresh, args.baseline)
-        print(f"baseline updated from {args.fresh} -> {args.baseline}")
+        with open(args.fresh) as fh:
+            merged = json.load(fh)
+        if os.path.exists(args.baseline):      # sections the fresh files
+            with open(args.baseline) as fh:    # do not produce survive
+                old = json.load(fh)
+            for k, v in old.items():
+                merged.setdefault(k, v)
+        if os.path.exists(args.fresh_decode):
+            with open(args.fresh_decode) as fh:
+                merged["decode"] = json.load(fh)
+        with open(args.baseline, "w") as fh:
+            json.dump(merged, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"baseline merged from {args.fresh}"
+              + (f" + {args.fresh_decode}"
+                 if os.path.exists(args.fresh_decode) else "")
+              + f" -> {args.baseline}")
         return
 
     with open(args.baseline) as fh:
         baseline = json.load(fh)
     with open(args.fresh) as fh:
         fresh = json.load(fh)
+    if os.path.exists(args.fresh_decode):
+        with open(args.fresh_decode) as fh:
+            fresh["decode"] = json.load(fh)
     violations = compare(baseline, fresh, args.latency_tol)
     if violations:
         print(f"PERF REGRESSION vs {args.baseline} "
@@ -103,9 +189,14 @@ def main() -> None:
             print(f"  {v}")
         sys.exit(1)
     n_arms = sum(len(r) for r in baseline["backends"].values())
+    decode_note = ""
+    if "decode" in baseline and "decode" in fresh:
+        decode_note = (f"; decode b8/b1="
+                       f"{fresh['decode']['speedup_b8_over_b1']:.2f}x "
+                       f"(floor {DECODE_SPEEDUP_MIN:.1f}x)")
     print(f"perf gate clean: {len(baseline['backends'])} backends, "
           f"{n_arms} arms within +{args.latency_tol * 100:.0f}% latency / "
-          f"exact bytes of {args.baseline}")
+          f"exact bytes of {args.baseline}{decode_note}")
 
 
 if __name__ == "__main__":

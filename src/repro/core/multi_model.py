@@ -56,9 +56,19 @@ class MultiModelRuntime:
                  store_backend: Optional[str] = None,
                  precision: Optional[str] = None,
                  executors: int = 1,
-                 reserve_timeout: Optional[float] = 30.0):
+                 reserve_timeout: Optional[float] = 30.0,
+                 kv_frac: float = 0.0, page_tokens: int = 16,
+                 max_batch: int = 8):
         assert 0.0 <= cache_frac < 1.0
+        assert 0.0 <= kv_frac < 1.0 and cache_frac + kv_frac < 1.0
         self.budget = int(budget)
+        # paged-KV serving reserve: kv_frac of the budget is carved out for
+        # KV pages (serving/paged_kv.py) before blocks are planned, so weight
+        # streaming and decode batches provably co-fit under ONE ledger
+        self.kv_frac = float(kv_frac)
+        self.page_tokens = int(page_tokens)
+        self.max_batch = int(max_batch)
+        self._batch_engines: Dict[str, Any] = {}
         self.mode = mode
         self.store_backend = store_backend
         self.precision = precision
@@ -111,10 +121,15 @@ class MultiModelRuntime:
                          if n in sm.store.skeletons)
         return total
 
+    def kv_reserve(self) -> int:
+        """Bytes carved out of the budget for paged-KV decode batches."""
+        return int(self.budget * self.kv_frac)
+
     def block_budget(self) -> int:
         """What is left for one model's resident blocks after the shared
-        cache and the pinned units take their cut."""
-        return self.budget - self.cache.capacity - self._pinned_bytes()
+        cache, the pinned units, and the KV-page reserve take their cut."""
+        return (self.budget - self.cache.capacity - self._pinned_bytes()
+                - self.kv_reserve())
 
     # ------------------------------------------------------------ planning
     def plan(self, batch: int, seq: int) -> Dict[str, BlockPlan]:
@@ -168,7 +183,8 @@ class MultiModelRuntime:
                                     urgency=max(float(urgencies.get(name, 1.0)),
                                                 1e-6))
                      for name, sm in self.models.items()]
-        reserved = float(self.cache.capacity + self._pinned_bytes())
+        reserved = float(self.cache.capacity + self._pinned_bytes()
+                         + self.kv_reserve())
         sched = MultiDNNScheduler(scheduled, available=float(self.budget),
                                   delta=self.delta, reserved=reserved)
         for s in sched.models:
@@ -194,6 +210,31 @@ class MultiModelRuntime:
         sm = self.models[name]
         sm.engine.set_priority(priority)
         return sm.forward_partial(batch, state=state, should_yield=should_yield)
+
+    def batch_engine(self, name: str):
+        """The model's continuous-batching decode engine
+        (:class:`~repro.serving.batch_engine.BatchDecodeEngine`), built
+        lazily on first use: its KV page pool is sized from an equal split
+        of the KV reserve and charged to the SHARED ledger, so decode
+        batches of one tenant squeeze against every tenant's weight blocks.
+        Requires ``kv_frac > 0`` and a decode-capable uniform-attention
+        model (see ``PagedKVCache``)."""
+        assert self._planned, "call plan() after registering all models"
+        if name not in self._batch_engines:
+            if self.kv_reserve() <= 0:
+                raise ValueError(
+                    "paged decode needs a KV reserve: construct the runtime "
+                    "with kv_frac > 0")
+            from repro.serving.batch_engine import BatchDecodeEngine
+            from repro.serving.paged_kv import PagedKVCache
+            sm = self.models[name]
+            kv = PagedKVCache.for_budget(
+                sm.cfg, self.ledger,
+                self.kv_reserve() // max(len(self.models), 1),
+                page_tokens=self.page_tokens, name=name)
+            self._batch_engines[name] = BatchDecodeEngine(
+                sm, kv, max_batch=self.max_batch)
+        return self._batch_engines[name]
 
     def decode(self, name: str, prompt_tokens, max_new_tokens: int = 8,
                max_len: int = 128) -> Tuple[Any, Dict]:

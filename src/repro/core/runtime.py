@@ -102,6 +102,7 @@ class PassState:
     t_active: float = 0.0     # wall clock while actually executing (not paused)
     preemptions: int = 0
     logits: Any = None
+    caches: Any = None        # layer_id -> prefill cache (collect_cache=True)
 
     @property
     def done(self) -> bool:
@@ -386,7 +387,8 @@ class SwappedModel:
             logits = h.astype(jnp.float32) @ jnp.asarray(w, jnp.float32)
         return softcap(logits, cfg.final_logit_softcap)
 
-    def _apply_unit(self, unit: Unit, uparams: dict, x, positions, batch):
+    def _apply_unit(self, unit: Unit, uparams: dict, x, positions, batch,
+                    collect: Optional[dict] = None):
         cfg = self.cfg
         if unit.kind == "embed":
             # embeddings are gather/frontend consumers: dequantize at use
@@ -398,8 +400,12 @@ class SwappedModel:
         kind = "dense" if unit.kind == "shared_attn" else unit.kind
         is_local = cfg.is_local_layer(unit.layer_id)
         p = cast_unit_params(uparams, jnp.dtype(cfg.dtype))
-        x, _, _ = apply_layer(cfg, kind, p, x, positions, is_local,
-                              None, None, "prefill")
+        x, new_cache, _ = apply_layer(cfg, kind, p, x, positions, is_local,
+                                      None, None, "prefill")
+        if collect is not None and unit.layer_id is not None:
+            # prefill cache (e.g. the prompt's K/V) captured per layer so a
+            # serving admit can seed the paged pool without a second pass
+            collect[unit.layer_id] = new_cache
         return x, positions
 
     # ------------------------------------------------------------ decode
@@ -490,9 +496,52 @@ class SwappedModel:
         return gen, {"wall_s": time.time() - t0,
                      "peak_resident_mb": self.engine.stats.peak_resident / 1e6}
 
+    def decode_step_paged(self, batch: dict, view) -> jax.Array:
+        """One BATCHED decode step through the paged KV cache (continuous
+        batching, serving/batch_engine.py): the model's weight blocks stream
+        through the memory window exactly ONCE and their swap-in cost
+        amortizes over every active sequence — the step cost is
+        ~(swap time) + B * (per-token compute) instead of B * (swap time) as
+        with per-sequence decode_loop calls. Attention K/V land in the page
+        pool via ``view`` (serving/paged_kv.PagedBatchView), so there is no
+        contiguous per-batch cache and batch membership may change freely
+        between steps.
+
+        batch: ``{"token": [B, 1], "pos": [B]}`` (+ ``"positions"`` for
+        mrope). Returns last-position logits [B, 1, vocab].
+        """
+        assert self.plan is not None and self.cfg.supports_decode()
+        cfg = self.cfg
+        eng = self.engine
+        names = [u.name for u in self.units]
+        x = positions = logits = None
+        for bi, lo, hi, handle in swap_schedule(eng, self.plan.blocks(),
+                                                names, self.plan.m):
+            t0 = time.perf_counter()
+            for ui, p in zip(range(lo, hi), handle.params):
+                unit = self.units[ui]
+                if unit.kind == "embed":
+                    x, positions = self.model._embed(
+                        materialize_tree(p), batch, "decode")
+                elif unit.kind == "head":
+                    logits = self._head_logits(p, x)
+                else:
+                    kind = ("dense" if unit.kind == "shared_attn"
+                            else unit.kind)
+                    pc = cast_unit_params(p, jnp.dtype(cfg.dtype))
+                    x, _, _ = apply_layer(
+                        cfg, kind, pc, x, positions,
+                        cfg.is_local_layer(unit.layer_id),
+                        None, batch["pos"], "decode",
+                        paged=view.bind(unit.layer_id))
+            x = jax.block_until_ready(x)
+            eng.record_exec(time.perf_counter() - t0)
+        return logits
+
     # ------------------------------------------------------------ forward
     def forward_partial(self, batch: dict, state: Optional[PassState] = None,
-                        should_yield=None) -> Tuple[PassState, Optional[Dict]]:
+                        should_yield=None, collect_cache: bool = False
+                        ) -> Tuple[PassState, Optional[Dict]]:
         """Swapped forward pass with block-boundary yield points.
 
         Runs blocks from ``state`` (fresh pass when None). After each block
@@ -511,7 +560,8 @@ class SwappedModel:
         eng = self.engine
         names = [u.name for u in self.units]
         if state is None:
-            state = PassState(blocks=self.plan.blocks(), m=self.plan.m)
+            state = PassState(blocks=self.plan.blocks(), m=self.plan.m,
+                              caches={} if collect_cache else None)
 
         t_start = time.perf_counter()
         pending = state.blocks[state.next_block:]
@@ -521,7 +571,8 @@ class SwappedModel:
                 t0 = time.perf_counter()
                 for u, p in zip(self.units[lo:hi], handle.params):
                     state.x, state.positions = self._apply_unit(
-                        u, p, state.x, state.positions, batch)
+                        u, p, state.x, state.positions, batch,
+                        collect=state.caches)
                 state.x = jax.block_until_ready(state.x)
                 eng.record_exec(time.perf_counter() - t0)
                 state.next_block += 1

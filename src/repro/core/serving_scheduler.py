@@ -57,7 +57,13 @@ class ServingRequest:
     ``deadline`` is a relative slack in seconds (None = the queue's default).
     The scheduler fills ``arrival`` on submit and ``logits`` / ``stats`` /
     ``latency_s`` on completion; ``error`` carries a failed pass's exception
-    instead of losing it on an executor thread."""
+    instead of losing it on an executor thread.
+
+    ``kind="generate"`` requests (``submit_generate``) carry a decode
+    request ``gen`` (:class:`repro.serving.engine.Request`) instead of a
+    prefill batch: the executor drives the model's continuous-batching
+    engine until that sequence retires, yielding at decode-step boundaries
+    the way prefill passes yield at block boundaries."""
     model: str
     batch: dict
     priority: float = 1.0
@@ -69,6 +75,8 @@ class ServingRequest:
     stats: Optional[Dict] = None
     error: Optional[BaseException] = None
     latency_s: float = 0.0
+    kind: str = "prefill"
+    gen: Any = None
     done: threading.Event = field(default_factory=threading.Event, repr=False)
 
     def urgency_key(self, default_slack: float) -> Tuple[float, float, int]:
@@ -249,6 +257,39 @@ class ServingScheduler:
             self._maybe_rebalance()
         return req
 
+    def submit_generate(self, model: str, gen_request,
+                        priority: float = 1.0,
+                        deadline: Optional[float] = None) -> ServingRequest:
+        """Queue a GENERATION (prefill + multi-token decode) against the
+        model's continuous-batching engine (``runtime.batch_engine``).
+
+        One driver ServingRequest is queued per generation; the busy set
+        serializes same-model drivers, so whichever driver holds the model
+        steps the WHOLE decode batch — its stepping serves every admitted
+        sequence, and each driver exits as soon as ITS OWN sequence retires
+        (possibly without ever stepping, if another driver already carried
+        it to completion). Completion is signalled from the engine's retire
+        callback, so ``req.wait()`` returns the moment the sequence
+        finishes, whichever driver ran the final step."""
+        engine = self.runtime.batch_engine(model)     # build early: raises
+        req = ServingRequest(model=model, batch={},   # surface on submit
+                             priority=float(priority), deadline=deadline,
+                             rid=next(self._rid),
+                             arrival=time.perf_counter(),
+                             kind="generate", gen=gen_request)
+
+        def on_retire(_gen, _req=req):
+            _req.latency_s = time.perf_counter() - _req.arrival
+            with self._lock:
+                self.completed.append(_req)
+            _req.done.set()
+
+        engine.submit(gen_request, on_retire=on_retire)
+        self.queue.submit(req)
+        if self.auto_rebalance:
+            self._maybe_rebalance()
+        return req
+
     def _maybe_rebalance(self) -> None:
         """Re-split the block budget when the queued demand mix changes."""
         mix = self.queue.urgency_mix()
@@ -283,21 +324,24 @@ class ServingScheduler:
                     continue
                 self._busy.add(req.model)
             try:
-                state, stats = rt.forward_partial(
-                    req.model, req.batch, state=req.state,
-                    should_yield=self._make_yield(req),
-                    priority=req.priority)
-                if stats is None:                       # preempted
-                    req.state = state
-                    with self._lock:
-                        self.preemptions += 1
-                    self.queue.requeue(req)
+                if req.kind == "generate":
+                    self._drive_generate(req)
                 else:
-                    req.logits, req.stats = state.logits, stats
-                    req.latency_s = time.perf_counter() - req.arrival
-                    with self._lock:
-                        self.completed.append(req)
-                    req.done.set()
+                    state, stats = rt.forward_partial(
+                        req.model, req.batch, state=req.state,
+                        should_yield=self._make_yield(req),
+                        priority=req.priority)
+                    if stats is None:                   # preempted
+                        req.state = state
+                        with self._lock:
+                            self.preemptions += 1
+                        self.queue.requeue(req)
+                    else:
+                        req.logits, req.stats = state.logits, stats
+                        req.latency_s = time.perf_counter() - req.arrival
+                        with self._lock:
+                            self.completed.append(req)
+                        req.done.set()
             except BaseException as e:                  # noqa: BLE001
                 req.error = e
                 req.done.set()
@@ -305,6 +349,33 @@ class ServingScheduler:
                 with self._lock:
                     self._busy.discard(req.model)
                 self.queue.kick()
+
+    def _drive_generate(self, req: ServingRequest) -> None:
+        """Drive the model's continuous-batching engine until ``req``'s own
+        sequence retires or a higher-priority runnable request appears at a
+        decode-step boundary (the decode analogue of block-boundary
+        preemption). Completion bookkeeping lives in the engine's retire
+        callback (``submit_generate``), so the driver only decides whether
+        to requeue itself."""
+        engine = self.runtime.batch_engine(req.model)
+        self.runtime.models[req.model].engine.set_priority(req.priority)
+        finished = engine.run_until(req.gen.rid,
+                                    should_yield=self._make_gen_yield(req))
+        if not finished:
+            with self._lock:
+                self.preemptions += 1
+            self.queue.requeue(req)
+
+    def _make_gen_yield(self, req: ServingRequest):
+        if not self.preempt:
+            return None
+
+        def should_yield() -> bool:
+            # same policy as prefill passes, consulted between decode steps
+            with self._lock:
+                others_busy = self._busy - {req.model}
+            return self.queue.max_runnable_priority(others_busy) > req.priority
+        return should_yield
 
     def _make_yield(self, req: ServingRequest):
         if not self.preempt:

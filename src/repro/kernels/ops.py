@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.dequant import dequant_int8 as _dequant_int8
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.swap_linear import swap_linear as _swap_linear
 from repro.kernels.swap_linear_q import swap_linear_q as _swap_linear_q
 
@@ -77,3 +78,23 @@ def flash_attention(q, k, v, *, scale=None, causal: bool = True,
                                         window=window, softcap=softcap)
     return _flash(q, k, v, scale=scale, causal=causal, window=window,
                   softcap=softcap, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "window", "softcap", "interpret"))
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                    scale=None, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    interpret: Optional[bool] = None):
+    """Single-token decode attention through a page table (the paged KV
+    serving path); interpret=None -> auto (TPU real, CPU ref)."""
+    if interpret is None:
+        if _on_tpu():
+            return _paged(q, k_pages, v_pages, page_table, seq_lens,
+                          scale=scale, window=window, softcap=softcap,
+                          interpret=False)
+        return _ref.paged_attention_ref(q, k_pages, v_pages, page_table,
+                                        seq_lens, scale=scale, window=window,
+                                        softcap=softcap)
+    return _paged(q, k_pages, v_pages, page_table, seq_lens, scale=scale,
+                  window=window, softcap=softcap, interpret=interpret)

@@ -80,6 +80,36 @@ def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
     return ys.swapaxes(0, 1).astype(r.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, seq_lens: jax.Array, *,
+                        scale: Optional[float] = None,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jax.Array:
+    """Gather-then-attend oracle for kernels/paged_attention: materialize
+    each sequence's pages contiguously ([B, NP*T, KV, hd]) and run masked
+    single-query attention. q: [B, H, hd]; returns [B, H, hd]."""
+    B, H, hd = q.shape
+    P, T, KV, _ = k_pages.shape
+    G = H // KV
+    NP = page_table.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    k = k_pages[page_table].reshape(B, NP * T, KV, hd)
+    v = v_pages[page_table].reshape(B, NP * T, KV, hd)
+    qf = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    tok = jnp.arange(NP * T)[None, :]                     # [1, S]
+    q_pos = (seq_lens - 1)[:, None]                       # [B, 1]
+    mask = tok < seq_lens[:, None]                        # causal: q is last
+    if window is not None:
+        mask &= (q_pos - tok) < window
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         scale: Optional[float] = None, causal: bool = True,
                         window: Optional[int] = None,

@@ -19,6 +19,12 @@ weight budget (blocks streamed through memory during inference).
         --budget-mb 16 --store quant --precision int4   # packed int4 units:
         # ~8x less swap-in I/O, quantized-resident weights stream through
         # the fused dequant-matmul kernel (swap_linear_q)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduce smoke \
+        --budget-mb 24 --paged --kv-frac 0.3 --max-batch 8
+        # continuous-batching decode: weight blocks and KV pages share the
+        # ONE budget; each decode step streams the blocks once for the
+        # whole batch, sequences admit/retire every step, page pressure
+        # preempts-by-recomputation
 """
 from __future__ import annotations
 
@@ -35,8 +41,10 @@ from repro.core.runtime import SwappedModel
 from repro.core.serving_scheduler import ServingScheduler
 from repro.launch.train import scale_config
 from repro.models.transformer import Model
+from repro.serving.batch_engine import BatchDecodeEngine
 from repro.serving.engine import (MultiModelServingEngine, Request,
                                   ServingEngine, pad_prompts)
+from repro.serving.paged_kv import PagedKVCache
 
 
 def _percentile(xs, q: float) -> float:
@@ -127,6 +135,46 @@ def serve_multi_scheduled(args) -> None:
         print(f"[serve-sched]   priority {prio:g}: n={len(lat)} "
               f"p50={_percentile(lat, 50):.1f} ms "
               f"p99={_percentile(lat, 99):.1f} ms", flush=True)
+
+
+def serve_paged(args, cfg, model, params) -> None:
+    """Swap-aware continuous-batching decode: weight blocks are planned
+    against (1 - kv_frac) of the budget and the KV page pool is sized from
+    the rest, BOTH charged to one ledger — growing the decode batch
+    genuinely competes with weight-block residency, and page pressure
+    preempts the youngest/lowest-priority sequences (recompute on
+    re-admission)."""
+    budget = int(args.budget_mb * 1e6)
+    kv_bytes = int(budget * args.kv_frac)
+    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory() as d:
+        sm = SwappedModel(model, params, d, mode="snet", budget=budget,
+                          prefetch_depth=args.prefetch_depth,
+                          store_backend=args.store,
+                          precision=args.precision)
+        sm.partition(budget - kv_bytes, DelayModel(), 1, args.prompt_len)
+        kv = PagedKVCache.for_budget(cfg, sm.engine.ledger, kv_bytes,
+                                     page_tokens=args.page_tokens)
+        be = BatchDecodeEngine(sm, kv, max_batch=args.max_batch)
+        reqs = [Request(i, list(rng.integers(0, cfg.vocab_size,
+                                             args.prompt_len)),
+                        max_new_tokens=args.new_tokens)
+                for i in range(args.requests)]
+        for r in reqs:
+            be.submit(r)
+        be.run_all()
+        st = be.stats()
+        peak = sm.engine.ledger.peak
+        sm.close()
+    print(f"[serve-paged] {args.requests} requests x {args.new_tokens} new "
+          f"tokens under {args.budget_mb:.0f} MB "
+          f"(kv_frac={args.kv_frac:g}, {kv.max_pages} pages x "
+          f"{kv.page_tokens} tok): {st['tok_per_s']:.2f} tok/s, "
+          f"occupancy {st['mean_occupancy']*100:.0f}%, "
+          f"preemptions {st['preemptions']:.0f}, "
+          f"peak resident {peak/1e6:.1f} MB "
+          f"({'OK' if peak <= budget else 'OVER'})", flush=True)
+    print(f"[serve-paged] sample output: {reqs[0].output[:12]}", flush=True)
 
 
 def serve_multi(args) -> None:
@@ -236,6 +284,18 @@ def main() -> None:
                          "hot-block cache (multi-tenant mode)")
     ap.add_argument("--budget-mb", type=float, default=None,
                     help="SwapNet weight budget: stream blocks during prefill")
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous-batching decode through the paged KV "
+                         "cache (requires --budget-mb): weight blocks and "
+                         "KV pages share one ledger, sequences admit/retire "
+                         "at every decode step")
+    ap.add_argument("--kv-frac", type=float, default=0.3,
+                    help="fraction of --budget-mb reserved for KV pages in "
+                         "--paged mode (the rest plans weight blocks)")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="tokens per KV page (one page spans all layers)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="decode batch slots for --paged continuous batching")
     ap.add_argument("--store", default="mmap",
                     choices=["mmap", "rawio", "quant", "directio"],
                     help="block-store backend: mmap (zero-copy, lossless), "
@@ -273,6 +333,11 @@ def main() -> None:
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
 
+    if args.paged:
+        if args.budget_mb is None:
+            raise SystemExit("--paged requires --budget-mb")
+        serve_paged(args, cfg, model, params)
+        return
     if args.budget_mb is not None:
         budget = int(args.budget_mb * 1e6)
         with tempfile.TemporaryDirectory() as d:

@@ -300,6 +300,37 @@ def gqa_apply(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
     return out, new_cache
 
 
+def gqa_apply_paged(cfg: ModelConfig, p: dict, x: jax.Array,
+                    positions: jax.Array, is_local, paged) -> jax.Array:
+    """Single-token batched decode through the paged KV cache
+    (serving/paged_kv.py): q/k/v projections + rope exactly as
+    :func:`gqa_apply`, then the new K/V are appended to each sequence's
+    pages and attention gathers through the page table
+    (kernels/paged_attention via the ops auto-dispatch).
+
+    ``paged`` is a layer-bound attend hook (``PagedBatchView.bind``); the
+    engine path applies units eagerly, so ``is_local`` is a concrete bool
+    and the window resolves to a STATIC int the kernel can specialize on.
+    """
+    B, S, D = x.shape
+    assert S == 1, "paged attention is the single-token decode path"
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, S, KV, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, S, KV, hd)
+    if cfg.rope_type != "none":
+        sections = cfg.mrope_sections if cfg.rope_type == "mrope" else None
+        ang = rope_angles(positions, hd, cfg.rope_theta, sections)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+    window = None
+    if cfg.sliding_window is not None and (cfg.layer_pattern == "swa"
+                                           or bool(is_local)):
+        window = int(cfg.sliding_window)
+    out = paged.attend(q[:, 0], k[:, 0], v[:, 0], scale=_attn_scale(cfg),
+                       window=window, softcap=cfg.attn_logit_softcap)
+    return linear(out.reshape(B, S, H * hd).astype(x.dtype), p["wo"])
+
+
 def _windowed_decode(q, cache, k_new, v_new, pos, *, scale, logit_cap):
     """Single-token decode against a ring-buffer cache of length W.
 

@@ -135,8 +135,11 @@ def model_defs(cfg: ModelConfig) -> Tuple[dict, List[Segment]]:
 # ------------------------------------------------------------------ layer
 def apply_layer(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
                 positions: jax.Array, is_local, cache, decode_pos,
-                mode: str):
-    """Returns (x, new_cache, aux)."""
+                mode: str, paged=None):
+    """Returns (x, new_cache, aux). ``paged`` (decode only) is a layer-bound
+    paged-attention hook (serving/paged_kv.PagedBatchView.bind): attention
+    K/V land in the page pool instead of a contiguous cache, and
+    ``new_cache`` is None."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "mamba2":
         h0 = cache["h"] if cache is not None else None
@@ -166,6 +169,10 @@ def apply_layer(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
     if cfg.mla is not None:
         a_out, new_cache = attn_mod.mla_apply(cfg, p["attn"], h, positions,
                                               cache, decode_pos)
+    elif paged is not None and mode == "decode":
+        a_out = attn_mod.gqa_apply_paged(cfg, p["attn"], h, positions,
+                                         is_local, paged)
+        new_cache = None
     else:
         a_out, new_cache = attn_mod.gqa_apply(cfg, p["attn"], h, positions,
                                               is_local, cache, decode_pos)

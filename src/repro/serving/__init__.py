@@ -1,2 +1,6 @@
+from repro.serving.batch_engine import BatchDecodeEngine, StepTrace
 from repro.serving.engine import (MultiModelServingEngine, Request,
                                   ServingEngine, pad_prompts)
+from repro.serving.kv_cache import gather_cache_rows, pad_prefill_cache
+from repro.serving.paged_kv import (PagedBatchView, PagedKVCache,
+                                    page_bytes_for)

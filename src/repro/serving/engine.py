@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
-from repro.serving.kv_cache import pad_prefill_cache
+from repro.serving.kv_cache import gather_cache_rows, pad_prefill_cache
 
 
 @dataclass
@@ -64,7 +64,13 @@ class ServingEngine:
         return pad_prompts(self.model.cfg, reqs)
 
     def generate(self, reqs: Sequence[Request]) -> Dict[str, float]:
-        """Greedy generation for a batch of requests (in place)."""
+        """Greedy generation for a batch of requests (in place).
+
+        Each request retires at ITS OWN ``max_new_tokens`` / EOS: finished
+        rows are gathered out of the decode cache (``gather_cache_rows``),
+        so a ragged batch never decodes padding for requests that are
+        already done — the contiguous-path cousin of the paged engine's
+        per-step retirement (serving/batch_engine.py)."""
         assert self.model.cfg.supports_decode(), "encoder-only model"
         B = len(reqs)
         t0 = time.perf_counter()
@@ -75,30 +81,39 @@ class ServingEngine:
         t_prefill = time.perf_counter() - t0
 
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        done = np.zeros(B, bool)
-        max_new = max(r.max_new_tokens for r in reqs)
+        active = list(range(B))         # request index per live cache row
         n_steps = 0
-        for step in range(max_new):
-            for i, r in enumerate(reqs):
-                if not done[i] and step < r.max_new_tokens:
-                    r.output.append(int(tok[i]))
-                    if r.eos is not None and int(tok[i]) == r.eos:
-                        done[i] = True
-                elif step >= r.max_new_tokens:
-                    done[i] = True
-            if done.all() or L + step >= self.max_len:
+        decoded = 0
+        for step in range(self.max_len):
+            keep: List[int] = []
+            for row, i in enumerate(active):
+                r = reqs[i]
+                t = int(tok[row])
+                r.output.append(t)
+                finished = (r.eos is not None and t == r.eos) \
+                    or len(r.output) >= r.max_new_tokens
+                if not finished:
+                    keep.append(row)
+            if not keep or L + step >= self.max_len:
                 break
+            if len(keep) < len(active):         # retire finished rows
+                cache = gather_cache_rows(self.model, cache, keep,
+                                          self.max_len, len(active))
+                tok = tok[jnp.asarray(keep)]
+                active = [active[row] for row in keep]
             db = {"token": tok[:, None],
-                  "pos": jnp.full((B,), L + step, jnp.int32)}
+                  "pos": jnp.full((len(active),), L + step, jnp.int32)}
             if self.model.cfg.rope_type == "mrope":
-                db["positions"] = jnp.full((B, 1, 3), L + step, jnp.int32)
+                db["positions"] = jnp.full((len(active), 1, 3), L + step,
+                                           jnp.int32)
             logits, cache = self._step(self.params, cache, db)
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             n_steps += 1
+            decoded += len(active)
         total = time.perf_counter() - t0
         return {"prefill_s": t_prefill, "total_s": total,
                 "decode_steps": n_steps,
-                "tok_per_s": (n_steps * B) / max(total - t_prefill, 1e-9)}
+                "tok_per_s": decoded / max(total - t_prefill, 1e-9)}
 
 
 class MultiModelServingEngine:

@@ -1,7 +1,22 @@
-"""KV/state cache management for the serving engine."""
+"""KV/state cache management for the LEGACY contiguous serving path.
+
+``pad_prefill_cache`` embeds a prefill cache into one contiguous
+``[B, max_len, ...]`` decode cache — simple and exact, but the whole padded
+allocation lives for the whole batch: memory scales with the LONGEST
+request and a batch slot cannot be reused until its tensor rows are
+re-gathered. :class:`~repro.serving.engine.ServingEngine` keeps this path
+(it is the in-memory reference the swapped paths are validated against)
+and uses ``gather_cache_rows`` to shrink the batch as requests retire.
+
+The swap-aware serving path stores K/V in fixed-size token PAGES instead
+(``serving/paged_kv.py`` + ``serving/batch_engine.py``): per-sequence page
+lists charged to the shared MemoryLedger, admission/eviction at decode-step
+granularity. SSM/shift-state and MLA-latent models stay on the contiguous
+path — their recurrent state is O(1) per sequence, so paging buys nothing.
+"""
 from __future__ import annotations
 
-from typing import List
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,3 +41,30 @@ def pad_prefill_cache(model: Model, prefill_cache: list, max_len: int,
         return jnp.pad(pc.astype(tgt.dtype), pads)
 
     return jax.tree.map(place, prefill_cache, target)
+
+
+def gather_cache_rows(model: Model, cache: list, rows: Sequence[int],
+                      max_len: int, batch: int) -> list:
+    """Shrink a ``batch``-row decode cache to the surviving ``rows`` (in
+    order) — how the contiguous engine retires finished requests mid-batch
+    instead of decoding padding until the longest request completes.
+
+    The batch axis is found per leaf by diffing the model's cache structure
+    at the old and new batch sizes (scanned segments stack layers LEADING,
+    so batch is not a fixed axis index across families)."""
+    old = model.cache_struct(ShapeConfig("serve", seq_len=max_len,
+                                         global_batch=batch, mode="decode"))
+    new = model.cache_struct(ShapeConfig("serve", seq_len=max_len,
+                                         global_batch=len(rows),
+                                         mode="decode"))
+    idx = jnp.asarray(list(rows), jnp.int32)
+
+    def take(leaf, o, n):
+        assert leaf.shape == o.shape, (leaf.shape, o.shape)
+        diffs = [i for i, (a, b) in enumerate(zip(o.shape, n.shape))
+                 if a != b]
+        assert len(diffs) == 1, \
+            f"expected exactly the batch axis to differ: {o.shape}->{n.shape}"
+        return jnp.take(leaf, idx, axis=diffs[0])
+
+    return jax.tree.map(take, cache, old, new)

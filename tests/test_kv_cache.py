@@ -1,0 +1,140 @@
+"""Contiguous-cache management (serving/kv_cache.py): pad_prefill_cache
+across model families, gather_cache_rows, and the engine's per-request
+retirement (no decoding padding for finished requests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import gather_cache_rows, pad_prefill_cache
+
+
+def _model(arch, dtype="float32"):
+    cfg = dataclasses.replace(ARCHS[arch].reduced(), dtype=dtype)
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b",       # plain GQA KV
+                                  "rwkv6-3b",         # pure state (no seq dim)
+                                  "zamba2-7b",        # mamba2 + shared attn
+                                  "deepseek-v2-lite-16b"])  # MLA latents
+def test_pad_prefill_cache_families(arch):
+    cfg, model, params = _model(arch)
+    B, S, MAX = 2, 10, 32
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    _, pc = jax.jit(model.prefill)(params, batch)
+    padded = pad_prefill_cache(model, pc, MAX, B)
+
+    target = model.cache_struct(ShapeConfig("serve", seq_len=MAX,
+                                            global_batch=B, mode="decode"))
+    t_leaves = jax.tree.leaves(target)
+    p_leaves = jax.tree.leaves(padded)
+    pc_leaves = jax.tree.leaves(pc)
+    assert len(p_leaves) == len(t_leaves) == len(pc_leaves)
+    for got, tgt, src in zip(p_leaves, t_leaves, pc_leaves):
+        # every leaf lands exactly on the decode struct (shape AND dtype)
+        assert got.shape == tgt.shape and got.dtype == tgt.dtype
+        # the prefill content survives as a prefix; the padding is zero
+        sl = tuple(slice(0, s) for s in src.shape)
+        np.testing.assert_array_equal(np.asarray(got[sl], np.float32),
+                                      np.asarray(src, np.float32))
+        total = float(jnp.sum(jnp.abs(got.astype(jnp.float32))))
+        prefix = float(jnp.sum(jnp.abs(src.astype(jnp.float32))))
+        assert total == pytest.approx(prefix, rel=1e-6)
+    # state leaves (SSM h/conv, rwkv S/shifts) are carried UNPADDED
+    if arch in ("rwkv6-3b", "zamba2-7b"):
+        assert any(g.shape == s.shape
+                   for g, s in zip(p_leaves, pc_leaves))
+
+
+def test_pad_prefill_cache_mrope_positions():
+    """The VLM (mrope) family pads its KV cache identically — positions are
+    an input, not cache state, so [B,L,3] prefill positions must not leak
+    into the padded cache shapes."""
+    cfg, model, params = _model("qwen2-vl-72b")
+    B, S, MAX = 2, 8, 24
+    rng = np.random.default_rng(1)
+    pos = np.broadcast_to(np.arange(S)[None, :, None], (B, S, 3)).copy()
+    batch = {"tokens": jnp.asarray(
+                 rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+             "positions": jnp.asarray(pos, jnp.int32)}
+    _, pc = jax.jit(model.prefill)(params, batch)
+    padded = pad_prefill_cache(model, pc, MAX, B)
+    target = model.cache_struct(ShapeConfig("serve", seq_len=MAX,
+                                            global_batch=B, mode="decode"))
+    for got, tgt in zip(jax.tree.leaves(padded), jax.tree.leaves(target)):
+        assert got.shape == tgt.shape and got.dtype == tgt.dtype
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "zamba2-7b"])
+def test_gather_cache_rows_selects_batch_rows(arch):
+    """Fill every leaf so each batch row (along WHATEVER axis batch lives
+    on) holds its own index, gather rows [3, 1], and check both selection
+    and order per leaf."""
+    cfg, model, params = _model(arch)
+    B, MAX, rows = 4, 16, [3, 1]
+    old_struct = model.cache_struct(ShapeConfig("serve", seq_len=MAX,
+                                                global_batch=B,
+                                                mode="decode"))
+    new_struct = model.cache_struct(ShapeConfig("serve", seq_len=MAX,
+                                                global_batch=len(rows),
+                                                mode="decode"))
+    axes, filled = [], []
+    for leaf, nleaf in zip(jax.tree.leaves(old_struct),
+                           jax.tree.leaves(new_struct)):
+        diffs = [i for i, (a, b) in enumerate(zip(leaf.shape, nleaf.shape))
+                 if a != b]
+        assert len(diffs) == 1, (leaf.shape, nleaf.shape)
+        axes.append(diffs[0])
+        ids = jnp.arange(B).reshape(
+            [B if i == diffs[0] else 1 for i in range(leaf.ndim)])
+        filled.append(jnp.broadcast_to(ids, leaf.shape).astype(leaf.dtype))
+    cache = jax.tree.unflatten(jax.tree.structure(old_struct), filled)
+
+    out = gather_cache_rows(model, cache, rows, MAX, B)
+    for leaf, nleaf, axis in zip(jax.tree.leaves(out),
+                                 jax.tree.leaves(new_struct), axes):
+        assert leaf.shape == nleaf.shape
+        arr = np.asarray(leaf, np.float32)
+        for slot, src_row in enumerate(rows):
+            got = np.take(arr, slot, axis=axis)
+            assert (got == src_row).all(), \
+                f"axis {axis} slot {slot}: expected row {src_row}"
+
+
+def test_ragged_generate_matches_solo():
+    """Requests with different max_new_tokens / EOS each retire at their own
+    length and produce exactly their solo-run outputs."""
+    cfg, model, params = _model("qwen2.5-3b")
+    engine = ServingEngine(model, params, max_len=64)
+    rng = np.random.default_rng(2)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 10)))
+               for _ in range(4)]
+    max_new = [2, 7, 4, 5]
+
+    solo = []
+    for p, n in zip(prompts, max_new):
+        r = Request(0, list(p), max_new_tokens=n)
+        engine.generate([r])
+        solo.append(list(r.output))
+
+    reqs = [Request(i, list(p), max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(prompts, max_new))]
+    stats = engine.generate(reqs)
+    assert [list(r.output) for r in reqs] == solo
+    assert all(len(r.output) == n for r, n in zip(reqs, max_new))
+    # the batch shrank: decode work is bounded by each request's OWN length,
+    # so total decoded tokens is sum(max_new) - B, not B * max(max_new)
+    assert stats["decode_steps"] == max(max_new) - 1
+    decoded = stats["tok_per_s"] * max(stats["total_s"] - stats["prefill_s"],
+                                       1e-9)
+    assert round(decoded) == sum(max_new) - len(reqs)

@@ -90,3 +90,26 @@ def test_regression_gate_fails_byte_drift_and_missing_arm():
     shrunk = copy.deepcopy(base)
     del shrunk["backends"]["fused"]
     assert any("missing" in v for v in compare(base, shrunk))
+
+
+def test_regression_gate_decode_section():
+    """The continuous-batching point: deterministic counts exact, throughput
+    may only rise or dip within tolerance, b8/b1 speedup has an absolute
+    floor, and the whole section may not silently vanish."""
+    import copy
+    from benchmarks.check_regression import compare_decode
+    base = _baseline_matrix()["decode"]
+    assert compare_decode(base, base) == []
+    slow = copy.deepcopy(base)
+    slow["arms"]["b8"]["tok_per_s"] *= 0.5
+    assert any("tok/s" in v for v in compare_decode(base, slow))
+    fast = copy.deepcopy(base)           # faster is never a regression
+    fast["arms"]["b8"]["tok_per_s"] *= 2.0
+    assert compare_decode(base, fast) == []
+    drift = copy.deepcopy(base)
+    drift["arms"]["b1"]["tokens_emitted"] += 1
+    assert any("deterministic" in v for v in compare_decode(base, drift))
+    flat = copy.deepcopy(base)
+    flat["speedup_b8_over_b1"] = 1.4
+    assert any("floor" in v for v in compare_decode(base, flat))
+    assert any("missing" in v for v in compare_decode(base, None))
