@@ -49,6 +49,14 @@ DECODE_ARMS = ("b1", "b8")
 DECODE_EXACT_KEYS = ("tokens_emitted", "decode_steps")
 DECODE_RATE_KEYS = ("tok_per_s",)
 DECODE_SPEEDUP_MIN = 2.0
+# chaos arm (faulty(mmap, p=0.01), bench_overhead): gated ABSOLUTELY on the
+# fresh run — the seed may be randomized (CHAOS_SEED), so there is no
+# baseline to diff against, only the invariants the arm exists to prove.
+# The tail bound is deliberately loose: the p99 of a small warm-pass sample
+# is max-dominated CPU-scheduler noise; what it must catch is a retry
+# ladder gone quadratic or a fault served as latency instead of retried —
+# both blow past any small multiple.
+CHAOS_P99_INFLATION_MAX = 5.0
 
 
 def compare(baseline: Dict, fresh: Dict,
@@ -86,6 +94,31 @@ def compare(baseline: Dict, fresh: Dict,
                         f"+{latency_tol * 100:.0f}% tolerance)")
     violations += compare_decode(baseline.get("decode"), fresh.get("decode"),
                                  latency_tol)
+    violations += compare_chaos(fresh.get("chaos"))
+    return violations
+
+
+def compare_chaos(new: Dict | None) -> List[str]:
+    """Fault-injection invariants (absolute, no baseline): retries make a
+    p=0.01 fault schedule invisible in the OUTPUTS (zero wrong results
+    served) and bounded in the TAIL (p99 within a small multiple of clean
+    mmap). A missing section once the baseline era includes it would be
+    caught as a suite regression, not here."""
+    if new is None:
+        return []
+    violations = []
+    f = new["faulty"]
+    if f.get("wrong_outputs", 0) != 0:
+        violations.append(
+            f"chaos.faulty.wrong_outputs: {f['wrong_outputs']} of "
+            f"{new['passes']} passes served WRONG bits under seed "
+            f"{new['seed']} (must be 0: faults are retried, never served)")
+    infl = f.get("p99_inflation_vs_mmap", 0.0)
+    if infl > CHAOS_P99_INFLATION_MAX:
+        violations.append(
+            f"chaos.faulty.p99_inflation_vs_mmap: {infl:.2f}x > "
+            f"{CHAOS_P99_INFLATION_MAX:.1f}x bound (p={new['p']}, "
+            f"seed {new['seed']}: retry/backoff cost is no longer bounded)")
     return violations
 
 

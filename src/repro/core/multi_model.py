@@ -86,18 +86,23 @@ class MultiModelRuntime:
     def add_model(self, name: str, model: Model, params: dict,
                   workdir: str,
                   store_backend: Optional[str] = None,
-                  precision: Optional[str] = None) -> SwappedModel:
+                  precision: Optional[str] = None,
+                  store_options: Optional[dict] = None) -> SwappedModel:
         """``store_backend`` overrides the runtime default per model (a
         quant-ineligible config falls back to mmap either way);
         ``precision`` overrides the config's per-model swap precision
-        (int8 | int4) for the quant backend."""
+        (int8 | int4) for the quant backend; ``store_options`` passes extra
+        backend build options through (the faulty backend's ``inner`` /
+        ``p`` / ``seed`` knobs — how the chaos suite wires fault injection
+        into ONE tenant of a shared-ledger runtime)."""
         assert name not in self.models, f"duplicate model name {name!r}"
         backend = store_backend or self.store_backend
         sm = SwappedModel(model, params, os.path.join(workdir, name),
                           mode=self.mode, prefetch_depth=self.prefetch_depth,
                           ledger=self.ledger, cache=self.cache, name=name,
                           store_backend=backend,
-                          precision=precision or self.precision)
+                          precision=precision or self.precision,
+                          store_options=store_options)
         if self.executors > 1:
             # concurrent passes: a transiently full ledger means WAIT for
             # another tenant's swap-out (priority wakeup), not fail
@@ -259,6 +264,8 @@ class MultiModelRuntime:
                 "vmem_working_set_mb": st.vmem_working_set / 1e6,
                 "store_backend": sm.store_backend,
                 "precision": sm.precision,
+                "retries": st.retries,
+                "faults": dict(st.faults),
             }
         return {
             "budget_mb": self.budget / 1e6,

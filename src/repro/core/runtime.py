@@ -190,6 +190,10 @@ def store_opts(backend: str, gpu_dispatch: bool, precision: str = "int8",
     if backend == "quant":
         assert precision in ("int8", "int4"), precision
         return {"bits": 4 if precision == "int4" else 8, "eager": not fused}
+    if backend == "faulty":
+        # chaos arm: fault injection over the zero-copy path by default;
+        # callers tune inner/p/seed via the ``store_options`` pass-through
+        return {"inner": "mmap"}
     return {}
 
 
@@ -214,23 +218,26 @@ class SwappedSequential:
                  ledger: Optional[MemoryLedger] = None,
                  cache: Optional[BlockCache] = None,
                  store_backend: Optional[str] = None,
-                 precision: str = "int8", fused: bool = False):
+                 precision: str = "int8", fused: bool = False,
+                 store_options: Optional[dict] = None):
         """named_units: [(name, params)]; apply_fn(i, params, x) -> x.
 
         ``precision``/``fused`` apply to the quant backend only: fused=True
         hands apply_fn QuantizedTensor weight leaves (stream through the
         fused dequant-matmul via layers.linear, or materialize at use), so
-        apply_fn must be quantization-aware (vision.apply_layer is)."""
+        apply_fn must be quantization-aware (vision.apply_layer is).
+        ``store_options`` overlays extra backend build options on top of the
+        derived ones (e.g. ``inner``/``p``/``seed`` for the faulty arm)."""
         self.named_units = list(named_units)
         self.apply_fn = apply_fn
         self.prefetch_depth = max(prefetch_depth, 1)
         self.store_backend = resolve_backend(store_backend, mode)
         self.precision = precision if self.store_backend == "quant" else "fp"
         self.fused = fused and self.store_backend == "quant"
+        opts = store_opts(self.store_backend, gpu_dispatch, precision, fused)
+        opts.update(store_options or {})
         self.store = build_store(self.named_units, workdir,
-                                 backend=self.store_backend,
-                                 **store_opts(self.store_backend, gpu_dispatch,
-                                              precision, fused))
+                                 backend=self.store_backend, **opts)
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
                                  gpu_dispatch=gpu_dispatch,
                                  ledger=ledger, cache=cache)
@@ -293,7 +300,8 @@ class SwappedSequential:
                    "bytes_swapped": st.bytes_swapped,
                    "bytes_logical": st.bytes_logical,
                    "bytes_resident_quantized": st.bytes_resident_quantized,
-                   "vmem_working_set": st.vmem_working_set}
+                   "vmem_working_set": st.vmem_working_set,
+                   "retries": st.retries, "faults": dict(st.faults)}
 
     def close(self):
         self.engine.close()
@@ -309,7 +317,8 @@ class SwappedModel:
                  cache: Optional[BlockCache] = None,
                  name: Optional[str] = None,
                  store_backend: Optional[str] = None,
-                 precision: Optional[str] = None):
+                 precision: Optional[str] = None,
+                 store_options: Optional[dict] = None):
         self.model = model
         self.cfg = model.cfg
         self.name = name or model.cfg.name
@@ -340,10 +349,11 @@ class SwappedModel:
                 continue
             seen.add(u.name)
             store_units.append((u.name, u.params))
+        opts = store_opts(self.store_backend, gpu_dispatch,
+                          self.precision, fused=True)
+        opts.update(store_options or {})
         self.store = build_store(store_units, workdir,
-                                 backend=self.store_backend,
-                                 **store_opts(self.store_backend, gpu_dispatch,
-                                              self.precision, fused=True))
+                                 backend=self.store_backend, **opts)
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
                                  gpu_dispatch=gpu_dispatch, pinned=pinned,
                                  ledger=ledger, cache=cache)
@@ -463,23 +473,27 @@ class SwappedModel:
                 if cfg.rope_type == "mrope":
                     batch["positions"] = jnp.full((B, 1, 3), pos0 + t, jnp.int32)
                 x = positions = None
-                for bi, lo, hi, handle in swap_schedule(eng, blocks,
-                                                        unit_names,
-                                                        self.plan.m):
-                    for ui, p in zip(range(lo, hi), handle.params):
-                        unit = self.units[ui]
-                        if unit.kind == "embed":
-                            x, positions = self.model._embed(
-                                materialize_tree(p), batch, "decode")
-                        elif unit.kind == "head":
-                            last_logits = self._head_logits(p, x)
-                        else:
-                            kind = "dense" if unit.kind == "shared_attn" else unit.kind
-                            pc = cast_unit_params(p, jnp.dtype(cfg.dtype))
-                            x, caches[ui], _ = apply_layer(
-                                cfg, kind, pc, x, positions,
-                                cfg.is_local_layer(unit.layer_id),
-                                caches[ui], pos, "decode")
+                gen = swap_schedule(eng, blocks, unit_names, self.plan.m)
+                try:
+                    for bi, lo, hi, handle in gen:
+                        for ui, p in zip(range(lo, hi), handle.params):
+                            unit = self.units[ui]
+                            if unit.kind == "embed":
+                                x, positions = self.model._embed(
+                                    materialize_tree(p), batch, "decode")
+                            elif unit.kind == "head":
+                                last_logits = self._head_logits(p, x)
+                            else:
+                                kind = "dense" if unit.kind == "shared_attn" else unit.kind
+                                pc = cast_unit_params(p, jnp.dtype(cfg.dtype))
+                                x, caches[ui], _ = apply_layer(
+                                    cfg, kind, pc, x, positions,
+                                    cfg.is_local_layer(unit.layer_id),
+                                    caches[ui], pos, "decode")
+                finally:
+                    # a raising step body must drain in-flight prefetches
+                    # NOW (ledger bytes, cache leases), not at gc time
+                    gen.close()
             return last_logits
 
         t0 = time.time()
@@ -515,27 +529,32 @@ class SwappedModel:
         eng = self.engine
         names = [u.name for u in self.units]
         x = positions = logits = None
-        for bi, lo, hi, handle in swap_schedule(eng, self.plan.blocks(),
-                                                names, self.plan.m):
-            t0 = time.perf_counter()
-            for ui, p in zip(range(lo, hi), handle.params):
-                unit = self.units[ui]
-                if unit.kind == "embed":
-                    x, positions = self.model._embed(
-                        materialize_tree(p), batch, "decode")
-                elif unit.kind == "head":
-                    logits = self._head_logits(p, x)
-                else:
-                    kind = ("dense" if unit.kind == "shared_attn"
-                            else unit.kind)
-                    pc = cast_unit_params(p, jnp.dtype(cfg.dtype))
-                    x, _, _ = apply_layer(
-                        cfg, kind, pc, x, positions,
-                        cfg.is_local_layer(unit.layer_id),
-                        None, batch["pos"], "decode",
-                        paged=view.bind(unit.layer_id))
-            x = jax.block_until_ready(x)
-            eng.record_exec(time.perf_counter() - t0)
+        gen = swap_schedule(eng, self.plan.blocks(), names, self.plan.m)
+        try:
+            for bi, lo, hi, handle in gen:
+                t0 = time.perf_counter()
+                for ui, p in zip(range(lo, hi), handle.params):
+                    unit = self.units[ui]
+                    if unit.kind == "embed":
+                        x, positions = self.model._embed(
+                            materialize_tree(p), batch, "decode")
+                    elif unit.kind == "head":
+                        logits = self._head_logits(p, x)
+                    else:
+                        kind = ("dense" if unit.kind == "shared_attn"
+                                else unit.kind)
+                        pc = cast_unit_params(p, jnp.dtype(cfg.dtype))
+                        x, _, _ = apply_layer(
+                            cfg, kind, pc, x, positions,
+                            cfg.is_local_layer(unit.layer_id),
+                            None, batch["pos"], "decode",
+                            paged=view.bind(unit.layer_id))
+                x = jax.block_until_ready(x)
+                eng.record_exec(time.perf_counter() - t0)
+        finally:
+            # a raising step body must drain in-flight prefetches NOW
+            # (ledger bytes, cache leases), not at gc time
+            gen.close()
         return logits
 
     # ------------------------------------------------------------ forward
@@ -605,6 +624,7 @@ class SwappedModel:
             "bytes_logical": st.bytes_logical,
             "bytes_resident_quantized": st.bytes_resident_quantized,
             "vmem_working_set": st.vmem_working_set,
+            "retries": st.retries, "faults": dict(st.faults),
         }
 
     def forward(self, batch: dict) -> Tuple[jax.Array, Dict]:

@@ -45,6 +45,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.multi_model import MultiModelRuntime
 from repro.core.runtime import PassState
+from repro.errors import RequestCancelled, SwapError, SwapTimeoutError
 
 __all__ = ["ServingRequest", "RequestQueue", "ServingScheduler"]
 
@@ -155,6 +156,20 @@ class RequestQueue:
                 else:
                     self._cond.wait()
 
+    def remove(self, rid: int) -> Optional[ServingRequest]:
+        """Remove (and return) the queued request with this rid; None if it
+        is not in the heap (already popped by an executor, or unknown).
+        O(n) scan + re-heapify — cancellation is rare, the queue is small."""
+        with self._cond:
+            for i, (_, req) in enumerate(self._heap):
+                if req.rid == rid:
+                    last = self._heap.pop()
+                    if i < len(self._heap):
+                        self._heap[i] = last
+                        heapq.heapify(self._heap)
+                    return req
+            return None
+
     def max_waiting_priority(self) -> float:
         """Highest priority among queued (not yet running) requests."""
         with self._cond:
@@ -224,19 +239,36 @@ class ServingScheduler:
 
     def __init__(self, runtime: MultiModelRuntime,
                  executors: Optional[int] = None, preempt: bool = True,
-                 default_slack: float = 1.0, auto_rebalance: bool = False):
+                 default_slack: float = 1.0, auto_rebalance: bool = False,
+                 fail_fast_after: int = 3, shed_deadlines: bool = False):
         self.runtime = runtime
         self.executors = int(executors if executors is not None
                              else runtime.executors)
         assert self.executors >= 1
         self.preempt = preempt
         self.auto_rebalance = auto_rebalance
+        # Graceful degradation knobs (docs/ARCHITECTURE.md "Failure
+        # handling"): ``fail_fast_after`` consecutive SwapError passes mark
+        # a model DOWN — its queued and future requests fail immediately
+        # with a structured error of the same class instead of each burning
+        # a full retry ladder, while co-tenant models keep serving
+        # (``reset_model`` re-admits after the operator fixes the storage).
+        # ``shed_deadlines=True`` rejects a request whose deadline already
+        # passed while it queued (SwapTimeoutError) rather than running it
+        # late — opt-in: shedding is a policy choice, not a default.
+        assert fail_fast_after >= 1
+        self.fail_fast_after = int(fail_fast_after)
+        self.shed_deadlines = bool(shed_deadlines)
         self.queue = RequestQueue(default_slack)
         self.completed: List[ServingRequest] = []
         self.preemptions = 0
+        self.shed = 0
+        self.failed_fast = 0
         self._rid = itertools.count()
         self._lock = threading.Lock()          # busy set + counters + mix
         self._busy: set = set()
+        self._model_failures: Dict[str, int] = {}   # consecutive SwapErrors
+        self._model_down: Dict[str, BaseException] = {}
         self._last_mix: Dict[str, float] = {}
         self._threads = [
             threading.Thread(target=self._worker, name=f"swapnet-exec-{i}",
@@ -280,8 +312,13 @@ class ServingScheduler:
 
         def on_retire(_gen, _req=req):
             _req.latency_s = time.perf_counter() - _req.arrival
-            with self._lock:
-                self.completed.append(_req)
+            _req.error = getattr(_gen, "error", None)
+            if _req.error is None:
+                with self._lock:
+                    self.completed.append(_req)
+            else:       # a failed sequence (evicted by the batch engine)
+                # surfaces through wait() and counts against the breaker
+                self._note_failure(_req.model, _req.error)
             _req.done.set()
 
         engine.submit(gen_request, on_retire=on_retire)
@@ -289,6 +326,46 @@ class ServingScheduler:
         if self.auto_rebalance:
             self._maybe_rebalance()
         return req
+
+    def cancel(self, rid: int) -> bool:
+        """Remove a still-queued request (e.g. after the caller's own
+        ``wait(timeout)`` expired) so it never becomes a ghost entry that
+        executes later against a caller who stopped listening.
+
+        Returns True when the request was cancelled: it completes
+        immediately with :class:`RequestCancelled` (``wait`` re-raises it).
+        Returns False — cleanly, no side effects — when the request is
+        already running on an executor, already completed, or unknown:
+        cancellation is queue-removal, never pass-abortion (a running pass
+        holds ledger bytes and cache leases that must unwind through its
+        own drain path)."""
+        req = self.queue.remove(rid)
+        if req is None:
+            return False
+        if req.kind == "generate" and req.gen is not None:
+            # un-submit the sequence from the batch engine too (pending-only
+            # there as well; if another driver already admitted it, the
+            # engine keeps it and the retire callback still fires)
+            try:
+                self.runtime.batch_engine(req.model).cancel(req.gen.rid)
+            except Exception:       # noqa: BLE001 — best-effort cleanup
+                pass
+        req.error = RequestCancelled(
+            f"request {rid} ({req.model}) cancelled before dispatch")
+        req.done.set()
+        return True
+
+    def reset_model(self, model: str) -> None:
+        """Clear the fail-fast breaker for ``model`` (storage was repaired /
+        remounted): its requests are served normally again."""
+        with self._lock:
+            self._model_failures.pop(model, None)
+            self._model_down.pop(model, None)
+
+    def model_down(self, model: str) -> Optional[BaseException]:
+        """The SwapError that tripped the model's breaker, or None."""
+        with self._lock:
+            return self._model_down.get(model)
 
     def _maybe_rebalance(self) -> None:
         """Re-split the block budget when the queued demand mix changes."""
@@ -316,6 +393,8 @@ class ServingScheduler:
                 if self.queue.closed and not len(self.queue):
                     return
                 continue
+            if self._degrade(req):      # breaker tripped / deadline shed:
+                continue                # completed with a structured error
             with self._lock:
                 if req.model in self._busy:
                     # raced with another executor picking the same model:
@@ -344,11 +423,69 @@ class ServingScheduler:
                         req.done.set()
             except BaseException as e:                  # noqa: BLE001
                 req.error = e
+                self._note_failure(req.model, e)
                 req.done.set()
-            finally:
+            else:
+                with self._lock:    # clean pass: the breaker counts
+                    self._model_failures.pop(req.model, None)   # CONSECUTIVE
+            finally:                                            # failures
                 with self._lock:
                     self._busy.discard(req.model)
                 self.queue.kick()
+
+    def _degrade(self, req: ServingRequest) -> bool:
+        """Scheduler-tier degradation, decided BEFORE the request takes an
+        executor slot: fail fast against a down model; shed a request whose
+        deadline already passed while queued. True = request completed
+        (with a structured error) and must not run."""
+        with self._lock:
+            down = self._model_down.get(req.model)
+        if down is not None:
+            # same exception CLASS as the tripping error, so callers'
+            # isinstance handling (SwapIOError vs SwapCorruptionError)
+            # works identically for fast-failed requests
+            req.error = type(down)(
+                f"model {req.model!r} is marked failed "
+                f"({self.fail_fast_after} consecutive swap errors; "
+                f"last: {down}) — failing fast; reset_model() re-admits",
+                model=req.model)
+            with self._lock:
+                self.failed_fast += 1
+            self._finish_degraded(req)
+            return True
+        if (self.shed_deadlines and req.deadline is not None
+                and time.perf_counter() - req.arrival > req.deadline):
+            req.error = SwapTimeoutError(
+                f"request {req.rid} ({req.model}) shed: queued "
+                f"{time.perf_counter() - req.arrival:.2f}s past its "
+                f"{req.deadline:.2f}s deadline", model=req.model)
+            with self._lock:
+                self.shed += 1
+            self._finish_degraded(req)
+            return True
+        return False
+
+    def _finish_degraded(self, req: ServingRequest) -> None:
+        if req.kind == "generate" and req.gen is not None:
+            try:        # un-submit from the batch engine (pending-only)
+                self.runtime.batch_engine(req.model).cancel(req.gen.rid)
+            except Exception:       # noqa: BLE001 — best-effort cleanup
+                pass
+        req.done.set()
+
+    def _note_failure(self, model: str, err: BaseException) -> None:
+        """Per-model circuit breaker: only SwapErrors count (a cancelled
+        request or a caller bug must not poison the model), and only
+        CONSECUTIVE ones trip it."""
+        if not isinstance(err, SwapError):
+            return
+        if err.model is None:
+            err.model = model
+        with self._lock:
+            n = self._model_failures.get(model, 0) + 1
+            self._model_failures[model] = n
+            if n >= self.fail_fast_after:
+                self._model_down.setdefault(model, err)
 
     def _drive_generate(self, req: ServingRequest) -> None:
         """Drive the model's continuous-batching engine until ``req``'s own

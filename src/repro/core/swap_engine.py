@@ -38,6 +38,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
+from repro.errors import SwapError, SwapIOError, SwapTimeoutError
 from repro.store import (BlockStore, LayerStore, MmapStore, QuantizedStore,
                          RawIOStore, as_reader)
 
@@ -317,6 +318,14 @@ class BlockCache:
                    if n not in self._pinned)
 
     # ------------------------------------------------------------ stats
+    def active_leases(self) -> Dict[str, int]:
+        """Entries some in-flight handle still references (name ->
+        refcount). Outside a pass this must be EMPTY — a non-zero refcount
+        with no live handle is a leaked lease that makes the entry
+        unevictable forever; the fault-path regression tests assert on it."""
+        with self._lock:
+            return {n: e[2] for n, e in self._entries.items() if e[2] > 0}
+
     @property
     def resident_bytes(self) -> int:
         with self._lock:
@@ -391,6 +400,14 @@ class SwapStats:
     vmem_working_set: int = 0    # per-kernel VMEM bytes at this precision
     cache_hits: int = 0
     cache_misses: int = 0
+    # fault accounting (docs/ARCHITECTURE.md "Failure handling"): ``retries``
+    # counts re-read attempts the loader burned recovering; ``faults`` tallies
+    # every failed read attempt by taxonomy class (SwapIOError /
+    # SwapCorruptionError / SwapTimeoutError) INCLUDING the ones retries
+    # absorbed — a healthy-looking pass over flaky storage is visible here.
+    # The timeline gains "retry" spans covering each backoff sleep.
+    retries: int = 0
+    faults: Dict[str, int] = field(default_factory=dict)
 
     # ------------------------------------------------------------ timeline
     def stage_spans(self, stage: str) -> List[tuple]:
@@ -481,6 +498,16 @@ class SwapEngine:
         self.reserve_blocking = False
         self.reserve_timeout: Optional[float] = 30.0
         self.priority = 0.0
+        # Fault-tolerance knobs (docs/ARCHITECTURE.md "Failure handling"):
+        # a failed unit read is retried up to ``read_retries`` times with
+        # exponential backoff starting at ``retry_backoff_s`` (doubling per
+        # attempt); ``read_deadline_s`` bounds ONE read attempt — a read
+        # that returns after the deadline is discarded and counted as
+        # SwapTimeoutError (retryable), so a storage latency cliff cannot
+        # silently become unbounded serving tail latency.
+        self.read_retries = 2
+        self.retry_backoff_s = 0.01
+        self.read_deadline_s: Optional[float] = None
         self._loader = ThreadPoolExecutor(max_workers=1,
                                           thread_name_prefix="swapnet-loader")
 
@@ -520,6 +547,47 @@ class SwapEngine:
         self.stats.peak_resident = max(self.stats.peak_resident, total)
 
     # -------------------------------------------------------------- swap-in
+    def _read_with_retry(self, name: str):
+        """One unit read through the fault-tolerance tier: normalize store
+        exceptions to the SwapError taxonomy, enforce the per-read deadline,
+        retry with exponential backoff. Returns the clean ``UnitRead``; what
+        escapes the retries carries ``unit``/``attempts`` context for the
+        scheduler tier. Runs on the loader thread (like the read itself)."""
+        delay = self.retry_backoff_s
+        attempt = 0
+        while True:
+            attempt += 1
+            t0 = time.perf_counter()
+            try:
+                r = self.store.read_unit(name)
+            except SwapError as e:
+                err = e
+            except OSError as e:
+                err = SwapIOError(f"unit {name!r}: {e}", unit=name)
+                err.__cause__ = e
+            else:
+                took = time.perf_counter() - t0
+                if (self.read_deadline_s is None
+                        or took <= self.read_deadline_s):
+                    return r
+                # late data is failed data: keeping it would let one slow
+                # read stretch the pipeline unboundedly — discard and retry
+                err = SwapTimeoutError(
+                    f"unit {name!r}: read took {took * 1e3:.1f} ms, "
+                    f"deadline {self.read_deadline_s * 1e3:.1f} ms",
+                    unit=name)
+            kind = type(err).__name__
+            self.stats.faults[kind] = self.stats.faults.get(kind, 0) + 1
+            if attempt > self.read_retries:
+                err.attempts = attempt
+                raise err
+            self.stats.retries += 1
+            s0 = time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            self.stats.timeline.append(("retry", s0, time.perf_counter()))
+            delay *= 2
+
     def swap_in(self, names: Sequence[str]) -> BlockHandle:
         params: List[dict] = []
         cached: List[str] = []
@@ -532,7 +600,7 @@ class SwapEngine:
                     cached.append(name)
                     self.stats.cache_hits += 1
                     continue
-                r = self.store.read_unit(name)
+                r = self._read_with_retry(name)
                 n = self.store.nbytes(name)
                 params.append(r.params)
                 io_s += r.io_s

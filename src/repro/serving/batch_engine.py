@@ -36,13 +36,14 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.runtime import SwappedModel
+from repro.errors import SwapError
 from repro.serving.engine import Request
 from repro.serving.paged_kv import PagedBatchView, PagedKVCache
 
@@ -59,6 +60,8 @@ class StepTrace:
     preempted: List[int]             # rids evicted (recompute later)
     kv_pages: int                    # pool pages in use after the step
     occupancy: float                 # len(batch) / max_batch
+    failed: List[int] = field(default_factory=list)   # rids evicted on an
+    #                                  unrecoverable swap failure (not retry)
 
 
 @dataclass
@@ -88,6 +91,7 @@ class BatchDecodeEngine:
         self.trace: List[StepTrace] = []
         self.tokens_emitted = 0
         self.preemptions = 0
+        self.failures = 0            # sequences evicted on swap failure
         self.decode_s = 0.0          # wall time inside batched decode steps
         self.prefill_s = 0.0
         self._pending: deque = deque()
@@ -107,6 +111,20 @@ class BatchDecodeEngine:
             self._known.add(req.rid)
             self._on_retire[req.rid] = on_retire
             self._pending.append(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Un-submit a still-PENDING request (its retire callback never
+        fires; the caller owns completion signalling). False once the
+        request was admitted — an active sequence holds KV pages and a
+        batch slot that must unwind through retire/evict, not removal."""
+        with self._lock:
+            for i, req in enumerate(self._pending):
+                if req.rid == rid:
+                    del self._pending[i]
+                    self._known.discard(rid)
+                    self._on_retire.pop(rid, None)
+                    return True
+        return False
 
     def is_done(self, rid: int) -> bool:
         with self._lock:
@@ -156,6 +174,7 @@ class BatchDecodeEngine:
         admitted: List[int] = []
         retired: List[int] = []
         preempted: List[int] = []
+        failed: List[int] = []
 
         # -- admission: fill free batch slots while pages are available
         while len(self._active) < self.max_batch:
@@ -174,7 +193,22 @@ class BatchDecodeEngine:
                         f"({self.kv.max_pages} x {self.kv.page_tokens} tok)")
                 break
             t0 = time.perf_counter()
-            tok = self._prefill(req)
+            try:
+                tok = self._prefill(req)
+            except SwapError as e:
+                # unrecoverable prefill failure (the loader's retries are
+                # already spent): evict THIS sequence — free its KV pages,
+                # surface the error through its own retire callback — and
+                # keep admitting; one broken request must not poison the
+                # batch or leak pool pages.
+                self.prefill_s += time.perf_counter() - t0
+                if e.model is None:
+                    e.model = self.sm.name
+                req.error = e
+                self.failures += 1
+                failed.append(req.rid)
+                self._retire(req)
+                continue
             self.prefill_s += time.perf_counter() - t0
             admitted.append(req.rid)
             if self._emit(req, tok):
@@ -184,12 +218,12 @@ class BatchDecodeEngine:
                 self._active.append(_Active(req, self._step_no))
 
         if not self._active:
-            if not admitted:
+            if not admitted and not failed:
                 with self._lock:
                     if not self._pending:
                         return None
             tr = StepTrace(self._step_no, [], admitted, retired, [],
-                           self.kv.pages_in_use, 0.0)
+                           self.kv.pages_in_use, 0.0, failed=failed)
             self.trace.append(tr)
             self._step_no += 1
             return tr
@@ -247,7 +281,8 @@ class BatchDecodeEngine:
             rids = []
 
         tr = StepTrace(self._step_no, rids, admitted, retired, preempted,
-                       self.kv.pages_in_use, len(rids) / self.max_batch)
+                       self.kv.pages_in_use, len(rids) / self.max_batch,
+                       failed=failed)
         self.trace.append(tr)
         self._step_no += 1
         return tr
@@ -285,6 +320,7 @@ class BatchDecodeEngine:
             "decode_steps": float(len(decoded)),
             "tokens_emitted": float(self.tokens_emitted),
             "preemptions": float(self.preemptions),
+            "failures": float(self.failures),
             "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
             "prefill_s": self.prefill_s,
             "decode_s": self.decode_s,

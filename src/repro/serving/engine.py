@@ -36,6 +36,11 @@ class Request:
     # preempts lower classes at block boundaries; the serialized engines
     # below ignore it (arrival order).
     priority: float = 1.0
+    # terminal failure (SwapError taxonomy): set by the batch engine when
+    # the sequence is EVICTED on an unrecoverable swap failure instead of
+    # retired cleanly — the retire callback fires either way, and the
+    # scheduler tier re-raises this from ServingRequest.wait().
+    error: Optional[BaseException] = None
 
 
 def pad_prompts(cfg, reqs: Sequence["Request"]) -> Dict:

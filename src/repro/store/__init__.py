@@ -11,7 +11,9 @@ units: ``bits=8`` int8 or ``bits=4`` packed int4; ``eager=False`` keeps
 fused-routable weights quantized-RESIDENT as QuantizedTensor leaves for the
 fused dequant-matmul path and dequantizes the rest on the loader thread),
 ``directio`` (O_DIRECT page-cache-bypassing reads with an aligned buffer
-arena and queue-depth control). See base.py for the BlockStore contract and
+arena and queue-depth control), ``faulty`` (deterministic fault injection
+wrapped around any other backend — ``inner="mmap"``, ``p``, ``seed``; see
+faulty.py and the chaos suite). See base.py for the BlockStore contract and
 docs/ARCHITECTURE.md for how the tier fits the swap pipeline.
 """
 from __future__ import annotations
@@ -20,6 +22,7 @@ from typing import Dict, Sequence, Tuple, Type
 
 from repro.store.base import BlockStore, UnitRead, as_reader, escape_name
 from repro.store.directio_store import DirectIOStore
+from repro.store.faulty import FaultInjector
 from repro.store.mmap_store import LayerStore, MmapStore
 from repro.store.quantized_store import QuantizedStore
 from repro.store.rawio_store import RawIOStore
@@ -29,6 +32,7 @@ STORE_BACKENDS: Dict[str, Type[BlockStore]] = {
     "rawio": RawIOStore,
     "quant": QuantizedStore,
     "directio": DirectIOStore,
+    "faulty": FaultInjector,
 }
 
 
@@ -42,5 +46,5 @@ def build_store(units: Sequence[Tuple[str, dict]], workdir: str,
 
 
 __all__ = ["BlockStore", "UnitRead", "MmapStore", "RawIOStore",
-           "QuantizedStore", "DirectIOStore", "LayerStore", "STORE_BACKENDS",
-           "build_store", "as_reader", "escape_name"]
+           "QuantizedStore", "DirectIOStore", "FaultInjector", "LayerStore",
+           "STORE_BACKENDS", "build_store", "as_reader", "escape_name"]

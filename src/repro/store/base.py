@@ -30,10 +30,13 @@ File naming is collision-free: ``_`` is escaped before ``/`` is replaced, so
 from __future__ import annotations
 
 import os
+import zlib
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, Dict, List, Sequence, Tuple
 
 import numpy as np
+
+from repro.errors import SwapCorruptionError
 
 if TYPE_CHECKING:       # repro.core.skeleton is imported lazily at call time:
     # repro.core.__init__ imports swap_engine which imports this package, so
@@ -129,10 +132,22 @@ class BlockStore:
     raw_format = False      # True: on-disk files are the raw flat-fp layout
     suffix = ".bin"
 
-    def __init__(self, workdir: str):
+    def __init__(self, workdir: str, verify: bool = False):
         self.workdir = workdir
         self.skeletons: Dict[str, "Skeleton"] = {}
         self.order: List[str] = []
+        # Integrity tier (see docs/ARCHITECTURE.md "Failure handling"):
+        # ``digests`` holds one CRC32 per unit FILE, recorded at build time;
+        # with ``verify=True`` every read checks its payload against the
+        # digest and raises SwapCorruptionError on mismatch BEFORE assembly,
+        # so a flipped bit can never become silently wrong weights. Off by
+        # default: the check costs one linear pass over the payload (and
+        # forces eager page-in for the otherwise-lazy mmap backend), so it
+        # is an explicit knob — chaos tests, the FaultInjector wrapper, and
+        # unreliable-storage deployments turn it on.
+        self.verify = verify
+        self.digests: Dict[str, int] = {}
+        self.integrity_failures = 0
 
     # ------------------------------------------------------------ build
     @classmethod
@@ -145,6 +160,7 @@ class BlockStore:
             if name in store.skeletons:     # shared unit (zamba2): once
                 continue
             store._write_unit(name, params)
+            store._record_digest(name)
         return store.open()
 
     def _write_unit(self, name: str, params: dict) -> None:
@@ -170,7 +186,42 @@ class BlockStore:
         store = cls(other.workdir, **opts)
         store.skeletons = other.skeletons
         store.order = other.order
+        store.digests = other.digests
+        store.verify = store.verify or other.verify
         return store.open()
+
+    # ------------------------------------------------------------ integrity
+    def _record_digest(self, name: str) -> None:
+        """CRC32 of the unit FILE as written (quantized payloads digest
+        their carrier bytes; direct-I/O files digest including alignment
+        padding — whatever ``read_unit`` will actually pull off storage)."""
+        crc = 0
+        with open(self._path(name), "rb") as fh:
+            while True:
+                chunk = fh.read(1 << 20)
+                if not chunk:
+                    break
+                crc = zlib.crc32(chunk, crc)
+        self.digests[name] = crc
+
+    def _verify_payload(self, name: str, buf) -> None:
+        """Check ``buf`` (the full file payload as read) against the unit's
+        build-time digest; no-op unless ``self.verify``. ``buf`` may be any
+        buffer-protocol object — for a memmap this forces the page-ins,
+        which is exactly the point: corruption is caught on the LOADER
+        thread, before assembly, never inside executor compute."""
+        if not self.verify:
+            return
+        want = self.digests.get(name)
+        if want is None:
+            return
+        got = zlib.crc32(memoryview(np.ascontiguousarray(buf)))
+        if got != want:
+            self.integrity_failures += 1
+            raise SwapCorruptionError(
+                f"unit {name!r}: payload CRC32 {got:#010x} != recorded "
+                f"{want:#010x} ({self.backend} store, "
+                f"{self._path(name)})", unit=name)
 
     # ------------------------------------------------------------ read
     def open(self) -> "BlockStore":

@@ -95,9 +95,9 @@ class DirectIOStore(BlockStore):
     raw_format = True
 
     def __init__(self, workdir: str, queue_depth: int = 4,
-                 arena_depth: int = 4):
+                 arena_depth: int = 4, verify: bool = False):
         assert queue_depth >= 1, queue_depth
-        super().__init__(workdir)
+        super().__init__(workdir, verify=verify)
         self.queue_depth = queue_depth
         self.arena = AlignedArena(arena_depth)
         self.direct_io: Optional[bool] = None   # resolved by open()
@@ -177,6 +177,8 @@ class DirectIOStore(BlockStore):
         t0 = time.perf_counter()
         buf = self.arena.take(aligned)
         self._read_into(self._path(name), buf)
+        # digest covers the padded file (what storage actually delivered)
+        self._verify_payload(name, buf)
         t1 = time.perf_counter()
         host_tree = assemble_np(skel, buf[:n])     # views: zero copy
         t2 = time.perf_counter()

@@ -23,9 +23,10 @@ class MmapStore(BlockStore):
     backend = "mmap"
     raw_format = True
 
-    def __init__(self, workdir: str, assembly: str = "ref"):
+    def __init__(self, workdir: str, assembly: str = "ref",
+                 verify: bool = False):
         assert assembly in ("ref", "dummy"), assembly
-        super().__init__(workdir)
+        super().__init__(workdir, verify=verify)
         self.assembly = assembly
 
     def _write_unit(self, name: str, params: dict) -> None:
@@ -43,6 +44,10 @@ class MmapStore(BlockStore):
             return self._empty_unit(name)
         t0 = time.perf_counter()
         buf = np.memmap(self._path(name), dtype=np.uint8, mode="r")
+        # verify (opt-in) trades mmap's lazy page-in for integrity: the CRC
+        # pass faults every page on the loader thread, so a corrupt unit is
+        # rejected here instead of being device-put and silently computed on
+        self._verify_payload(name, buf)
         t1 = time.perf_counter()
         if self.assembly == "dummy":
             host_tree = assemble_dummy(skel, buf)      # dummy-model copies

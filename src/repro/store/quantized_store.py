@@ -118,9 +118,9 @@ class QuantizedStore(BlockStore):
     raw_format = False
 
     def __init__(self, workdir: str, min_quant_size: int = MIN_QUANT_SIZE,
-                 bits: int = 8, eager: bool = True):
+                 bits: int = 8, eager: bool = True, verify: bool = False):
         assert bits in (8, 4), bits
-        super().__init__(workdir)
+        super().__init__(workdir, verify=verify)
         self.min_quant_size = min_quant_size
         self.bits = bits
         self.eager = eager
@@ -193,6 +193,9 @@ class QuantizedStore(BlockStore):
         # it can no longer overlap the executor (module docstring, "Pipeline
         # contract").
         buf = np.fromfile(self._path(name), dtype=np.uint8)
+        # integrity over the CARRIER bytes: a flipped nibble in a packed-int4
+        # payload is caught here, never dequantized into wrong weights
+        self._verify_payload(name, buf)
         t1 = time.perf_counter()
         # unpack: host-side work over the payload. Raw and streamable leaves
         # are pure views; in lazy mode the quantized leaves the fused kernel

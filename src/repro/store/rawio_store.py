@@ -23,8 +23,9 @@ class RawIOStore(BlockStore):
     backend = "rawio"
     raw_format = True
 
-    def __init__(self, workdir: str, gpu_dispatch: bool = False):
-        super().__init__(workdir)
+    def __init__(self, workdir: str, gpu_dispatch: bool = False,
+                 verify: bool = False):
+        super().__init__(workdir, verify=verify)
         self.gpu_dispatch = gpu_dispatch
 
     def _write_unit(self, name: str, params: dict) -> None:
@@ -43,6 +44,7 @@ class RawIOStore(BlockStore):
         with open(self._path(name), "rb") as fh:       # read(): page-cache copy
             raw = fh.read()
         staged = np.frombuffer(raw, np.uint8).copy()   # staging copy
+        self._verify_payload(name, staged)
         t1 = time.perf_counter()
         host_tree = assemble_np(skel, staged)
         t2 = time.perf_counter()
