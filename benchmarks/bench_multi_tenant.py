@@ -31,6 +31,7 @@ import json
 import os
 import tempfile
 import time
+import urllib.request
 
 import jax
 import numpy as np
@@ -40,6 +41,7 @@ from repro.configs import ARCHS
 from repro.core.multi_model import MultiModelRuntime
 from repro.core.serving_scheduler import ServingScheduler
 from repro.models.transformer import Model
+from repro.serving.control_plane import ControlPlane
 from repro.serving.engine import Request
 
 ARCH_SET = ("qwen2.5-3b", "gemma2-9b")
@@ -129,6 +131,101 @@ def _run_arm(models, workload, executors: int, preempt: bool,
     }
 
 
+def _http(base: str, path: str, body=None, timeout: float = 120.0):
+    req = urllib.request.Request(
+        base + path,
+        data=(json.dumps(body).encode() if body is not None else None),
+        headers={"Content-Type": "application/json"},
+        method="POST" if body is not None else "GET")
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return json.loads(resp.read())
+
+
+def _run_arm_http(models, workload, executors: int = 2,
+                  preempt: bool = True, hi_delay_s: float = 0.08) -> dict:
+    """The scheduled arm driven PURELY over the HTTP control plane
+    (serving/control_plane.py) instead of in-process ``sched.submit``:
+    same runtime, same scheduler, same workload — the requests enter
+    through ``POST /v1/submit`` and the latencies come back from
+    ``GET /v1/requests/<rid>`` polls. Reported latency is the scheduler's
+    own arrival->completion ``latency_s`` (the poll just reads it), so the
+    arm measures what the HTTP SEAM adds to scheduling behaviour, not the
+    client's polling cadence; the client-observed wall time is reported
+    separately as ``mean_poll_overhead_ms``."""
+    with tempfile.TemporaryDirectory() as d:
+        rt = MultiModelRuntime(BUDGET, cache_frac=0.25, executors=executors)
+        for arch, (model, params, _) in models.items():
+            rt.add_model(arch, model, params, d)
+        rt.plan(batch=BATCH, seq=SEQ)
+        for arch, (_, _, batch) in models.items():
+            rt.forward(arch, batch)             # warm: trace/dispatch caches
+        sched = ServingScheduler(rt, executors=executors, preempt=preempt)
+        with ControlPlane(rt, sched, host="127.0.0.1", port=0) as cp:
+            base = cp.url
+            label_of, rids, t_submit = {}, [], {}
+            hi_landed = False
+            for arch, prio in workload:
+                if prio == PRIO_HI and hi_delay_s and not hi_landed:
+                    time.sleep(hi_delay_s)      # land mid-pass of the burst
+                    hi_landed = True
+                rows = np.asarray(models[arch][2]["tokens"]).tolist()
+                resp = _http(base, "/v1/submit",
+                             {"model": arch, "tokens": rows,
+                              "priority": prio})
+                rid = resp["rid"]
+                label_of[rid] = "hi" if prio == PRIO_HI else "lo"
+                t_submit[rid] = time.perf_counter()
+                rids.append(rid)
+            lat_of, overheads = {}, []
+            deadline = time.monotonic() + 600
+            for rid in rids:
+                while True:
+                    out = _http(base, f"/v1/requests/{rid}")
+                    if out["status"] == "done":
+                        lat_of[rid] = out["latency_s"] * 1e3
+                        overheads.append(
+                            (time.perf_counter() - t_submit[rid]) * 1e3
+                            - lat_of[rid])
+                        break
+                    assert out["status"] == "pending", out
+                    assert time.monotonic() < deadline, f"rid {rid} stuck"
+                    time.sleep(0.02)
+        sched.shutdown()
+        st = rt.stats()
+        rt.close()
+    classes = {"lo": [], "hi": []}
+    for rid in rids:
+        classes[label_of[rid]].append(lat_of[rid])
+    return {
+        "transport": "http",
+        "executors": executors,
+        "preempt": preempt,
+        "preemptions": sched.preemptions,
+        "peak_resident_mb": st["peak_resident_mb"],
+        "budget_mb": BUDGET / 1e6,
+        "budget_ok": bool(st["peak_resident_mb"] * 1e6 <= BUDGET),
+        "mean_poll_overhead_ms": float(np.mean(overheads)),
+        "classes": {k: _percentiles(v) for k, v in classes.items()},
+    }
+
+
+def _http_parity(in_proc: dict, http: dict, tolerance: float) -> dict:
+    """Per-class p50/p99 agreement between the in-process scheduled arm
+    and the HTTP-driven one: each ratio must land in
+    ``[1/tolerance, tolerance]``. Same scheduler, same workload — a ratio
+    outside that band means the HTTP seam DISTORTED serving (e.g. latency
+    measured from the poll loop instead of the scheduler)."""
+    ratios, ok = {}, True
+    for cls in ("hi", "lo"):
+        for q in ("p50_ms", "p99_ms"):
+            a = in_proc["classes"][cls][q]
+            b = http["classes"][cls][q]
+            r = (b / a) if a else float("inf")
+            ratios[f"{cls}.{q}"] = r
+            ok = ok and (1.0 / tolerance) <= r <= tolerance
+    return {"tolerance": tolerance, "ok": bool(ok), "ratios": ratios}
+
+
 def _run_decode_heavy(models, n_gen: int, n_hi: int, max_new: int = 6,
                       hi_delay_s: float = 0.05) -> dict:
     """Mixed prefill/decode traffic through the priority-aware scheduler:
@@ -190,7 +287,7 @@ def _run_decode_heavy(models, n_gen: int, n_hi: int, max_new: int = 6,
     }
 
 
-def run(n_lo: int, n_hi: int) -> dict:
+def run(n_lo: int, n_hi: int, parity_tolerance: float = 4.0) -> dict:
     models = _build_models()
     workload = _workload(n_lo, n_hi)
     report = {
@@ -203,6 +300,8 @@ def run(n_lo: int, n_hi: int) -> dict:
                                    preempt=False, honor_priority=False),
             "scheduled": _run_arm(models, workload, executors=2,
                                   preempt=True, honor_priority=True),
+            "scheduled_http": _run_arm_http(models, workload, executors=2,
+                                            preempt=True),
         },
         "decode_heavy": _run_decode_heavy(models, n_gen=max(n_lo // 2, 2),
                                           n_hi=max(n_hi, 2)),
@@ -210,6 +309,12 @@ def run(n_lo: int, n_hi: int) -> dict:
     ser = report["arms"]["serialized"]["classes"]["hi"]["p99_ms"]
     sch = report["arms"]["scheduled"]["classes"]["hi"]["p99_ms"]
     report["hi_p99_speedup"] = ser / sch if sch else 0.0
+    report["http_parity"] = _http_parity(report["arms"]["scheduled"],
+                                         report["arms"]["scheduled_http"],
+                                         parity_tolerance)
+    assert report["http_parity"]["ok"], \
+        f"HTTP arm diverged from the in-process scheduler: " \
+        f"{report['http_parity']['ratios']}"
     return report
 
 
@@ -247,6 +352,12 @@ def main() -> None:
                  f"budget_ok={a['budget_ok']}")
     emit("multi_tenant.hi_p99_speedup", 0.0,
          f"serialized/scheduled={report['hi_p99_speedup']:.2f}x")
+    par = report["http_parity"]
+    emit("multi_tenant.http_parity", 0.0,
+         f"ok={par['ok']};tolerance={par['tolerance']};"
+         + ";".join(f"{k}={v:.2f}" for k, v in par["ratios"].items())
+         + f";poll_overhead_ms="
+           f"{report['arms']['scheduled_http']['mean_poll_overhead_ms']:.1f}")
     dh = report["decode_heavy"]
     for cls in ("hi", "gen_lo"):
         c = dh["classes"][cls]

@@ -1,0 +1,25 @@
+"""Layered serving configuration (defaults -> profile -> env -> CLI).
+
+``repro.config`` owns HOW a serving process is assembled; ``repro.configs``
+(plural) owns the model architecture registry. The split is deliberate:
+an arch config describes a network, a ServeConfig describes a deployment.
+
+    from repro.config import resolve_config
+    cfg = resolve_config(profile="edge-tpu")         # + env + CLI overlays
+    rt = MultiModelRuntime.from_config(cfg)
+"""
+from repro.config.layering import (ENV_PREFIX, deep_merge, env_overlay,
+                                   explain_layers, resolve_config)
+from repro.config.profiles import PROFILES, profile_names, profile_overlay
+from repro.config.schema import (PRECISIONS, REDUCE_PRESETS, SERVE_STORES,
+                                 ConfigError, HttpConfig, RuntimeConfig,
+                                 SchedulerConfig, ServeConfig,
+                                 WorkloadConfig, config_fields)
+
+__all__ = [
+    "ServeConfig", "WorkloadConfig", "RuntimeConfig", "SchedulerConfig",
+    "HttpConfig", "ConfigError", "resolve_config", "explain_layers",
+    "deep_merge", "env_overlay", "config_fields", "PROFILES",
+    "profile_names", "profile_overlay", "ENV_PREFIX", "REDUCE_PRESETS",
+    "SERVE_STORES", "PRECISIONS",
+]

@@ -82,6 +82,28 @@ class MultiModelRuntime:
         self.models: Dict[str, SwappedModel] = {}
         self._planned = False
 
+    @classmethod
+    def from_config(cls, cfg) -> "MultiModelRuntime":
+        """Construct from a resolved :class:`repro.config.ServeConfig` —
+        the launcher/scheduler seam: every knob that used to be a
+        positional flag threads through the config's ``runtime`` section.
+        Requires ``runtime.budget_mb`` (a budget IS the runtime's reason to
+        exist); the KV reserve is carved only when paging is on."""
+        rt_cfg = cfg.runtime
+        if rt_cfg.budget_mb is None:
+            raise ValueError("runtime.budget_mb is required to build a "
+                             "MultiModelRuntime (unswapped serving has no "
+                             "shared ledger)")
+        return cls(int(rt_cfg.budget_mb * 1e6),
+                   prefetch_depth=rt_cfg.prefetch_depth,
+                   cache_frac=rt_cfg.cache_frac,
+                   store_backend=rt_cfg.store,
+                   precision=rt_cfg.precision,
+                   executors=rt_cfg.executors,
+                   kv_frac=rt_cfg.kv_frac if rt_cfg.paged else 0.0,
+                   page_tokens=rt_cfg.page_tokens,
+                   max_batch=rt_cfg.max_batch)
+
     # ------------------------------------------------------------ registry
     def add_model(self, name: str, model: Model, params: dict,
                   workdir: str,

@@ -34,7 +34,14 @@ from __future__ import annotations
 from typing import Optional
 
 __all__ = ["SwapError", "SwapIOError", "SwapCorruptionError",
-           "SwapTimeoutError", "RequestCancelled"]
+           "SwapTimeoutError", "RequestCancelled", "ConfigError"]
+
+
+class ConfigError(ValueError):
+    """A layered serving configuration (``repro.config``) failed to resolve:
+    unknown key, uncoercible value, missing profile, or a cross-field
+    invariant violation. Raised at STARTUP (or at the control-plane request
+    that carried the bad overlay) — never from the serving hot path."""
 
 
 class SwapError(Exception):

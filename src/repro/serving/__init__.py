@@ -1,6 +1,9 @@
 from repro.serving.batch_engine import BatchDecodeEngine, StepTrace
+from repro.serving.control_plane import ENDPOINTS, ControlPlane
 from repro.serving.engine import (MultiModelServingEngine, Request,
                                   ServingEngine, pad_prompts)
 from repro.serving.kv_cache import gather_cache_rows, pad_prefill_cache
+from repro.serving.metrics import (METRIC_FAMILIES, MetricsRegistry,
+                                   render_prometheus)
 from repro.serving.paged_kv import (PagedBatchView, PagedKVCache,
                                     page_bytes_for)

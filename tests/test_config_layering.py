@@ -1,0 +1,223 @@
+"""Layered serving configuration (ISSUE 9 tentpole): defaults -> profile ->
+env (``SWAPNET_*``) -> CLI.
+
+Covers the edge cases the layering must hold:
+  * deep-merge semantics — nested dicts recurse, scalars AND lists are
+    last-wins (a layer that sets ``workload.priorities`` replaces the list
+    wholesale);
+  * env type coercion — ``"24"`` -> float, ``"true"/"0"`` -> bool,
+    ``"1,8"`` -> ``[1.0, 8.0]``, ``"none"`` -> None for Optional fields;
+  * unknown-key rejection with a did-you-mean hint (dict keys AND env
+    vars), instead of a typo silently falling back to a default;
+  * profile-not-found with a did-you-mean hint;
+  * full precedence ordering through all four layers;
+  * ``validate()`` cross-field invariants;
+  * every shipped profile resolves AND validates (the profiles are data —
+    nothing type-checks them until they go through the schema).
+"""
+import dataclasses
+
+import pytest
+
+from repro.config import (ENV_PREFIX, PROFILES, ServeConfig, deep_merge,
+                          env_overlay, explain_layers, profile_names,
+                          profile_overlay, resolve_config)
+from repro.errors import ConfigError
+
+
+# ------------------------------------------------------------- deep merge
+def test_deep_merge_dicts_recurse():
+    base = {"runtime": {"budget_mb": 8.0, "store": "mmap"}}
+    out = deep_merge(base, {"runtime": {"budget_mb": 24.0}})
+    assert out["runtime"] == {"budget_mb": 24.0, "store": "mmap"}
+    # inputs are not mutated
+    assert base["runtime"]["budget_mb"] == 8.0
+
+
+def test_deep_merge_lists_replace_wholesale():
+    base = {"workload": {"priorities": [1.0, 8.0]}, "models": ["a", "b"]}
+    out = deep_merge(base, {"workload": {"priorities": [2.0]},
+                            "models": []})
+    assert out["workload"]["priorities"] == [2.0]     # not [2.0, 8.0]
+    assert out["models"] == []                        # not ["a", "b"]
+
+
+def test_deep_merge_scalar_replaces_dict_and_vice_versa():
+    assert deep_merge({"k": {"a": 1}}, {"k": 2}) == {"k": 2}
+    assert deep_merge({"k": 2}, {"k": {"a": 1}}) == {"k": {"a": 1}}
+
+
+# ------------------------------------------------------------- env layer
+def test_env_overlay_coerces_types():
+    cfg = resolve_config(env={
+        "SWAPNET_RUNTIME_BUDGET_MB": "24",
+        "SWAPNET_RUNTIME_EXECUTORS": "2",
+        "SWAPNET_RUNTIME_PAGED": "true",
+        "SWAPNET_SCHEDULER_PREEMPT": "0",
+        "SWAPNET_WORKLOAD_PRIORITIES": "1,8",
+        "SWAPNET_ARCH": "qwen2.5-3b",
+    })
+    assert cfg.runtime.budget_mb == 24.0
+    assert cfg.runtime.executors == 2
+    assert cfg.runtime.paged is True
+    assert cfg.scheduler.preempt is False
+    assert cfg.workload.priorities == [1.0, 8.0]
+    assert cfg.arch == "qwen2.5-3b"
+
+
+def test_env_overlay_optional_none_strings():
+    ov = env_overlay({"SWAPNET_RUNTIME_PRECISION": "none"})
+    cfg = ServeConfig.from_dict(ov)
+    assert cfg.runtime.precision is None
+
+
+def test_env_overlay_models_list():
+    cfg = resolve_config(env={
+        "SWAPNET_MODELS": "qwen2.5-3b,gemma2-9b",
+        "SWAPNET_RUNTIME_BUDGET_MB": "48",
+    })
+    assert cfg.models == ["qwen2.5-3b", "gemma2-9b"]
+
+
+def test_env_overlay_ignores_foreign_vars():
+    assert env_overlay({"PATH": "/bin", "SWAPNET_PROFILE": "mcu"}) == {}
+
+
+def test_env_unknown_var_did_you_mean():
+    with pytest.raises(ConfigError, match="SWAPNET_RUNTIME_BUDGET_MB"):
+        env_overlay({"SWAPNET_RUNTIME_BUDGT_MB": "24"})
+
+
+def test_env_bad_int_raises():
+    with pytest.raises(ConfigError, match="runtime.executors"):
+        resolve_config(env={"SWAPNET_RUNTIME_EXECUTORS": "two"})
+
+
+def test_env_bad_bool_raises():
+    with pytest.raises(ConfigError, match="runtime.paged"):
+        resolve_config(env={"SWAPNET_RUNTIME_PAGED": "maybe"})
+
+
+def test_env_profile_variable_selects_profile():
+    cfg = resolve_config(env={ENV_PREFIX + "PROFILE": "mcu"})
+    assert cfg.profile == "mcu"
+    assert cfg.runtime.store == "quant"
+    # an explicit profile beats $SWAPNET_PROFILE
+    cfg = resolve_config(profile="edge-tpu",
+                         env={ENV_PREFIX + "PROFILE": "mcu"})
+    assert cfg.profile == "edge-tpu"
+
+
+# ---------------------------------------------------------- unknown keys
+def test_unknown_key_did_you_mean():
+    with pytest.raises(ConfigError, match="budget_mb"):
+        ServeConfig.from_dict({"runtime": {"budjet_mb": 8}})
+
+
+def test_unknown_toplevel_key_rejected():
+    with pytest.raises(ConfigError, match="unknown config key"):
+        ServeConfig.from_dict({"runtme": {}})
+
+
+def test_profile_not_found_did_you_mean():
+    with pytest.raises(ConfigError, match="edge-tpu"):
+        profile_overlay("edge_tpu")
+    with pytest.raises(ConfigError):
+        resolve_config(profile="no-such-profile", env={})
+
+
+# ------------------------------------------------------------ precedence
+def test_precedence_defaults_profile_env_cli():
+    # defaults: budget_mb None; profile mcu: 8; env: 16; cli: 32
+    assert ServeConfig().runtime.budget_mb is None
+    cfg = resolve_config(profile="mcu", env={})
+    assert cfg.runtime.budget_mb == 8.0
+    cfg = resolve_config(profile="mcu",
+                         env={"SWAPNET_RUNTIME_BUDGET_MB": "16"})
+    assert cfg.runtime.budget_mb == 16.0
+    cfg = resolve_config(profile="mcu",
+                         env={"SWAPNET_RUNTIME_BUDGET_MB": "16"},
+                         cli={"runtime": {"budget_mb": 32.0}})
+    assert cfg.runtime.budget_mb == 32.0
+    # a layer only touches what it sets: mcu's store survives the overrides
+    assert cfg.runtime.store == "quant"
+    assert cfg.profile == "mcu"
+
+
+def test_explain_layers_order_and_names():
+    names = [n for n, _ in explain_layers(
+        profile="mcu", env={"SWAPNET_REDUCE": "smoke"},
+        cli={"arch": "qwen2.5-3b"})]
+    assert names == ["defaults", "profile:mcu", "env", "cli"]
+
+
+def test_defaults_resolve_hermetically():
+    cfg = resolve_config(env={})
+    assert cfg == ServeConfig()         # no layers -> pure defaults
+
+
+# ------------------------------------------------------------ validation
+def test_validate_rejects_bad_enums():
+    with pytest.raises(ConfigError, match="reduce"):
+        resolve_config(env={}, cli={"reduce": "tiny"})
+    with pytest.raises(ConfigError, match="store"):
+        resolve_config(env={}, cli={"runtime": {"store": "s3"}})
+    with pytest.raises(ConfigError, match="precision"):
+        resolve_config(env={}, cli={"runtime": {"precision": "int2"}})
+
+
+def test_validate_rejects_bad_ranges():
+    with pytest.raises(ConfigError, match="executors"):
+        resolve_config(env={}, cli={"runtime": {"executors": 0}})
+    with pytest.raises(ConfigError, match="cache_frac"):
+        resolve_config(env={}, cli={"runtime": {"cache_frac": 1.5}})
+    with pytest.raises(ConfigError, match="budget_mb"):
+        resolve_config(env={}, cli={"runtime": {"budget_mb": -1}})
+    with pytest.raises(ConfigError, match="no block budget"):
+        resolve_config(env={}, cli={"runtime": {"paged": True,
+                                                "cache_frac": 0.5,
+                                                "kv_frac": 0.6}})
+
+
+def test_validate_arch_xor_models():
+    with pytest.raises(ConfigError, match="not both"):
+        resolve_config(env={}, cli={"arch": "qwen2.5-3b",
+                                    "models": ["gemma2-9b"]})
+
+
+def test_validate_unknown_arch_did_you_mean():
+    with pytest.raises(ConfigError, match="qwen2.5-3b"):
+        resolve_config(env={}, cli={"arch": "qwen-3b"})
+
+
+# -------------------------------------------------------------- profiles
+def test_every_profile_resolves_and_validates():
+    assert set(profile_names()) == set(PROFILES)
+    for name in profile_names():
+        cfg = resolve_config(profile=name, env={})
+        assert cfg.profile == name
+        assert cfg.model_names(), name          # complete scenario
+        assert cfg.runtime.budget_mb and cfg.runtime.budget_mb > 0, name
+        assert PROFILES[name]["description"]
+
+
+def test_profiles_cover_distinct_device_classes():
+    stores = {resolve_config(profile=n, env={}).runtime.store
+              for n in profile_names()}
+    assert len(stores) >= 2          # not three copies of one deployment
+    assert {"mcu", "edge-tpu", "workstation"} <= set(profile_names())
+
+
+# ------------------------------------------------------------- round trip
+def test_to_dict_from_dict_round_trip():
+    cfg = resolve_config(profile="workstation", env={})
+    again = ServeConfig.from_dict(cfg.to_dict()).validate()
+    assert again == cfg
+
+
+def test_from_dict_partial_sections():
+    cfg = ServeConfig.from_dict({"runtime": {"budget_mb": 4}})
+    assert cfg.runtime.budget_mb == 4.0
+    assert cfg.runtime.store == "mmap"          # untouched defaults
+    assert dataclasses.asdict(cfg.workload) \
+        == dataclasses.asdict(ServeConfig().workload)

@@ -1,0 +1,313 @@
+"""HTTP control plane + metrics registry (ISSUE 9 tentpole).
+
+One real serving stack (reduced arch, real ServingScheduler, real
+ThreadingHTTPServer on an ephemeral port) behind every test:
+
+  * submit/poll round-trip: HTTP logits == the runtime's own forward;
+  * the acceptance invariant — ``/metrics`` numbers match the scheduler's
+    internal stats EXACTLY (same values, not approximately);
+  * cancel, runtime model arrival (add + replan), breaker reset, replan;
+  * error surface: bad JSON, unknown routes/models/rids, generate without
+    a KV reserve -> 409.
+
+The MetricsRegistry is additionally covered stand-alone (it must work
+with no scheduler attached, and render well-formed Prometheus text).
+"""
+import dataclasses
+import json
+import tempfile
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.multi_model import MultiModelRuntime
+from repro.core.serving_scheduler import ServingScheduler
+from repro.models.transformer import Model
+from repro.serving.control_plane import ENDPOINTS, ControlPlane
+from repro.serving.engine import Request, pad_prompts
+from repro.serving.metrics import MetricsRegistry, render_prometheus
+
+
+def _call(base, path, body=None, timeout=60.0):
+    req = urllib.request.Request(
+        base + path,
+        data=(json.dumps(body).encode() if body is not None else None),
+        headers={"Content-Type": "application/json"},
+        method="POST" if body is not None else "GET")
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        raw = resp.read()
+        if "text/plain" in resp.headers.get("Content-Type", ""):
+            return resp.status, raw.decode()
+        return resp.status, json.loads(raw)
+
+
+def _status_of(err_or_resp):
+    return err_or_resp[0] if isinstance(err_or_resp, tuple) \
+        else err_or_resp.code
+
+
+def _expect_error(base, path, status, body=None):
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _call(base, path, body)
+    assert ei.value.code == status, ei.value.read()
+    return json.loads(ei.value.read() or b"{}")
+
+
+def _tiny(arch="qwen2.5-3b", seed=0):
+    cfg = dataclasses.replace(ARCHS[arch].reduced(), dtype="float32")
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.key(seed))
+
+
+@pytest.fixture(scope="module")
+def stack():
+    """runtime + scheduler + control plane over ONE reduced model, with an
+    injected arrival factory so add_model stays cheap."""
+    cfg, model, params = _tiny()
+
+    def build_model(arch, reduce, seed):
+        _, m, p = _tiny(arch, seed=seed)
+        return m, p
+
+    with tempfile.TemporaryDirectory() as d:
+        rt = MultiModelRuntime(budget=int(40e6), cache_frac=0.2)
+        rt.add_model("qwen2.5-3b", model, params, d)
+        rt.plan(batch=2, seq=16)
+        sched = ServingScheduler(rt, preempt=True)
+        cp = ControlPlane(rt, sched, host="127.0.0.1", port=0,
+                          plan_shape=(2, 16), reduce="smoke", workdir=d,
+                          build_model=build_model)
+        with cp:
+            yield cfg, rt, sched, cp, cp.url
+        sched.shutdown()
+        rt.close()
+
+
+# ---------------------------------------------------------------- liveness
+def test_healthz(stack):
+    _, _, _, _, base = stack
+    status, health = _call(base, "/healthz")
+    assert status == 200
+    assert health["status"] == "ok"
+    assert health["models"]["qwen2.5-3b"] is True
+
+
+def test_models_listing(stack):
+    _, rt, _, _, base = stack
+    _, out = _call(base, "/v1/models")
+    info = out["models"]["qwen2.5-3b"]
+    assert info["up"] is True
+    assert info["n_blocks"] == rt.models["qwen2.5-3b"].plan.n_blocks
+    assert info["store"] == "mmap"
+
+
+# ----------------------------------------------------------- submit / poll
+def test_submit_poll_matches_in_process_forward(stack):
+    cfg, rt, _, _, base = stack
+    rng = np.random.default_rng(3)
+    rows = [[int(t) for t in rng.integers(0, cfg.vocab_size, 16)]
+            for _ in range(2)]
+    _, sub = _call(base, "/v1/submit", {"model": "qwen2.5-3b",
+                                        "tokens": rows})
+    assert sub["batch_shape"] == [2, 16]
+    out = _poll_done(base, sub["rid"])
+    assert out["latency_s"] > 0
+    got = np.asarray(out["logits"] if "logits" in out else [])
+    _, full = _call(base, f"/v1/requests/{sub['rid']}?logits=1")
+    got = np.asarray(full["logits"])
+
+    reqs = [Request(i, r) for i, r in enumerate(rows)]
+    ref, _ = rt.forward("qwen2.5-3b", pad_prompts(cfg, reqs))
+    np.testing.assert_allclose(got, np.asarray(ref, np.float64),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_submit_seeded_random_workload(stack):
+    _, _, _, _, base = stack
+    _, sub = _call(base, "/v1/submit", {"model": "qwen2.5-3b",
+                                        "requests": 3, "prompt_len": 8,
+                                        "seed": 11, "priority": 4.0})
+    out = _poll_done(base, sub["rid"])
+    assert out["logits_shape"][0] == 3
+    assert out["priority"] == 4.0
+
+
+def _poll_done(base, rid, deadline_s=120.0):
+    import time
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline_s:
+        _, out = _call(base, f"/v1/requests/{rid}")
+        if out["status"] != "pending":
+            assert out["status"] == "done", out
+            return out
+        time.sleep(0.02)
+    raise AssertionError(f"rid {rid} still pending after {deadline_s}s")
+
+
+def test_cancel_or_complete(stack):
+    _, _, _, _, base = stack
+    _, sub = _call(base, "/v1/submit", {"model": "qwen2.5-3b",
+                                        "requests": 1, "prompt_len": 8})
+    _, res = _call(base, f"/v1/requests/{sub['rid']}/cancel", {})
+    _, out = _call(base, f"/v1/requests/{sub['rid']}")
+    if res["cancelled"]:
+        assert out["status"] == "cancelled"
+        assert out["error"]["type"] == "RequestCancelled"
+    else:       # executor won the race; the request must complete cleanly
+        _poll_done(base, sub["rid"])
+
+
+# ------------------------------------------------------- metrics exactness
+def test_metrics_match_scheduler_internals_exactly(stack):
+    """The acceptance criterion: a /metrics scrape agrees EXACTLY with the
+    scheduler's own latency_by_class / counters at snapshot time."""
+    _, rt, sched, cp, base = stack
+    # quiesce: everything submitted so far completed (tests above waited)
+    by_class = sched.latency_by_class()
+    quant = cp.metrics.latency_quantiles()
+    _, text = _call(base, "/metrics")
+
+    got_count = _prom_samples(text, "swapnet_requests_completed_total")
+    for prio, lats in by_class.items():
+        assert got_count[(("priority", f"{prio:g}"),)] == float(len(lats))
+    got_lat = _prom_samples(text, "swapnet_request_latency_seconds")
+    for prio, q in quant.items():
+        key = ("priority", f"{prio:g}")
+        assert got_lat[(key, ("quantile", "0.5"))] \
+            == pytest.approx(q["p50_s"], rel=0, abs=0)
+        assert got_lat[(key, ("quantile", "0.99"))] \
+            == pytest.approx(q["p99_s"], rel=0, abs=0)
+        # and the quantiles ARE np.percentile over the raw latencies
+        assert q["p50_s"] == float(np.percentile(by_class[prio], 50))
+
+    got = _prom_samples(text, "swapnet_cache_hit_rate")
+    assert got[()] == float(rt.cache.hit_rate())
+    got = _prom_samples(text, "swapnet_ledger_peak_bytes")
+    assert got[()] == float(rt.ledger.peak)
+    got = _prom_samples(text, "swapnet_preemptions_total")
+    assert got[()] == float(sched.preemptions)
+    got = _prom_samples(text, "swapnet_model_up")
+    assert got[(("model", "qwen2.5-3b"),)] == 1.0
+
+
+def _prom_samples(text, family):
+    """{ tuple(sorted(label pairs)) : value } for one metric family."""
+    out = {}
+    for line in text.splitlines():
+        if not line.startswith(family) or line.startswith("#"):
+            continue
+        rest = line[len(family):]
+        if rest[:1] not in ("{", " "):
+            continue        # a longer family name sharing the prefix
+        labels = ()
+        if rest.startswith("{"):
+            inner, _, rest = rest[1:].partition("}")
+            labels = tuple(sorted(
+                tuple(p.split("=", 1)) for p in inner.split(",") if p))
+            labels = tuple((k, v.strip('"')) for k, v in labels)
+        out[labels] = float(rest.strip())
+    return out
+
+
+def test_metrics_content_type_and_families(stack):
+    _, _, _, _, base = stack
+    req = urllib.request.Request(base + "/metrics")
+    with urllib.request.urlopen(req, timeout=30) as resp:
+        assert "text/plain" in resp.headers["Content-Type"]
+        text = resp.read().decode()
+    assert "# TYPE swapnet_ledger_occupancy gauge" in text
+    assert "# HELP swapnet_cache_hit_rate" in text
+    assert "swapnet_http_requests_total" in text
+
+
+# --------------------------------------------------------- runtime arrival
+def test_add_model_then_serve_it(stack):
+    _, rt, sched, _, base = stack
+    _, added = _call(base, "/v1/models",
+                     {"arch": "qwen2.5-3b", "name": "tenant-b"})
+    assert added["added"] == "tenant-b"
+    assert "tenant-b" in added["models"]
+    assert rt.models["tenant-b"].plan is not None    # replanned
+    _, sub = _call(base, "/v1/submit", {"model": "tenant-b",
+                                        "requests": 2, "prompt_len": 16})
+    _poll_done(base, sub["rid"])
+    # duplicate arrival is a conflict
+    _expect_error(base, "/v1/models", 409,
+                  {"arch": "qwen2.5-3b", "name": "tenant-b"})
+
+
+def test_replan_budgets_over_http(stack):
+    _, rt, _, _, base = stack
+    _, out = _call(base, "/v1/replan",
+                   {"urgencies": {name: 1.0 for name in rt.models}})
+    assert set(out["budgets_mb"]) == set(rt.models)
+    assert all(v > 0 for v in out["budgets_mb"].values())
+
+
+def test_reset_model(stack):
+    _, _, _, _, base = stack
+    _, out = _call(base, "/v1/models/qwen2.5-3b/reset", {})
+    assert out == {"reset": "qwen2.5-3b", "up": True}
+    _expect_error(base, "/v1/models/nope/reset", 404, {})
+
+
+# ------------------------------------------------------------ error paths
+def test_error_surface(stack):
+    _, _, _, _, base = stack
+    _expect_error(base, "/v1/submit", 400, {})                # no model
+    _expect_error(base, "/v1/submit", 404, {"model": "ghost"})
+    _expect_error(base, "/v1/submit", 400,
+                  {"model": "qwen2.5-3b", "tokens": [[999999]]})
+    _expect_error(base, "/v1/requests/424242", 404)
+    _expect_error(base, "/no/such/route", 404)
+    # generate needs a KV reserve; this runtime has kv_frac=0 -> 409
+    _expect_error(base, "/v1/generate", 409,
+                  {"model": "qwen2.5-3b", "prompt": [1, 2, 3]})
+
+
+def test_bad_json_body_is_400(stack):
+    _, _, _, _, base = stack
+    req = urllib.request.Request(base + "/v1/submit", data=b"{nope",
+                                 headers={"Content-Type": "application/json"},
+                                 method="POST")
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=30)
+    assert ei.value.code == 400
+
+
+def test_endpoints_contract_is_complete(stack):
+    """Every route the handler dispatches is declared in ENDPOINTS (the
+    docs-drift checker verifies docs against this same tuple)."""
+    paths = {p for _, p in ENDPOINTS}
+    for must in ("/healthz", "/metrics", "/v1/submit", "/v1/generate",
+                 "/v1/models", "/v1/replan", "/v1/shutdown",
+                 "/v1/requests/<rid>", "/v1/requests/<rid>/cancel",
+                 "/v1/models/<name>/reset"):
+        assert must in paths, must
+
+
+# ------------------------------------------------- registry, stand-alone
+def test_metrics_registry_without_scheduler():
+    reg = MetricsRegistry()             # nothing attached: no samples
+    assert reg.collect() == []
+    assert reg.latency_quantiles() == {}
+    reg.count_http("/healthz")
+    reg.count_http("/healthz")
+    text = reg.render_prometheus()
+    assert 'swapnet_http_requests_total{endpoint="/healthz"} 2' in text
+
+
+def test_render_prometheus_groups_families():
+    text = render_prometheus([
+        ("swapnet_queue_depth", {}, 3.0),
+        ("swapnet_model_up", {"model": "a"}, 1.0),
+        ("swapnet_model_up", {"model": "b"}, 0.0),
+    ])
+    lines = text.splitlines()
+    assert lines.count("# TYPE swapnet_model_up gauge") == 1
+    assert 'swapnet_model_up{model="a"} 1' in lines
+    assert 'swapnet_model_up{model="b"} 0' in lines

@@ -1,0 +1,138 @@
+"""Back-compat golden snapshot (ISSUE 9 satellite): every pre-profile
+``repro.launch.serve`` invocation must resolve to the SAME effective
+config — and route to the same serving path — after the layered-config
+refactor as before it.
+
+``tests/golden/serve_configs.json`` freezes, for a matrix of real legacy
+flag combinations, the fully-resolved ``ServeConfig`` dict plus the
+dispatch mode. The resolution here is hermetic (``env={}``), so a
+developer's ``SWAPNET_*`` variables can't leak into the assertion.
+
+Regenerate (ONLY after an intentional semantic change, with the diff
+reviewed):
+
+    PYTHONPATH=src:tests python -c \
+        "import test_serve_backcompat as t; t.regenerate()"
+"""
+import json
+import os
+
+import pytest
+
+from repro.config import resolve_config
+from repro.launch.serve import build_parser, cli_overrides, dispatch_mode
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "serve_configs.json")
+
+# the legacy invocation matrix: one entry per pre-refactor serving path /
+# flag interaction worth freezing
+LEGACY_ARGVS = [
+    ["--arch", "qwen2.5-3b"],
+    ["--arch", "qwen2.5-3b", "--reduce", "100m", "--requests", "4",
+     "--new-tokens", "8", "--max-len", "64"],
+    ["--arch", "gemma2-9b", "--reduce", "smoke", "--prompt-len", "16"],
+    ["--arch", "qwen2.5-3b", "--budget-mb", "64"],
+    ["--arch", "qwen2.5-3b", "--budget-mb", "16", "--store", "quant",
+     "--precision", "int4", "--prefetch-depth", "1"],
+    ["--arch", "qwen2.5-3b", "--budget-mb", "24", "--store", "directio"],
+    ["--multi", "qwen2.5-3b,gemma2-9b", "--budget-mb", "48",
+     "--rounds", "3"],
+    ["--multi", "qwen2.5-3b,gemma2-9b", "--budget-mb", "48",
+     "--executors", "2", "--priorities", "1,8", "--rebalance"],
+    ["--multi", "qwen2.5-3b,gemma2-9b", "--budget-mb", "48",
+     "--executors", "2", "--cache-frac", "0.2", "--store", "rawio"],
+    ["--arch", "qwen2.5-3b", "--budget-mb", "24", "--paged",
+     "--kv-frac", "0.3", "--page-tokens", "16", "--max-batch", "8"],
+    ["--arch", "qwen2.5-3b", "--budget-mb", "24", "--paged",
+     "--cache-frac", "0.1", "--new-tokens", "4"],
+]
+
+
+def _resolve(argv):
+    args = build_parser().parse_args(argv)
+    cfg = resolve_config(profile=args.profile, env={},
+                         cli=cli_overrides(args))
+    return cfg, {"argv": argv, "resolved": cfg.to_dict(),
+                 "mode": dispatch_mode(cfg)}
+
+
+def regenerate():
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    cases = [_resolve(argv)[1] for argv in LEGACY_ARGVS]
+    with open(GOLDEN, "w") as f:
+        json.dump(cases, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(cases)} cases to {GOLDEN}")
+
+
+def _golden():
+    if not os.path.exists(GOLDEN):     # keep the module importable for
+        return []                      # regenerate(); the matrix test fails
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def test_golden_covers_the_matrix():
+    golden = _golden()
+    assert [c["argv"] for c in golden] == LEGACY_ARGVS, \
+        "golden file out of sync with LEGACY_ARGVS — regenerate() and " \
+        "review the diff"
+
+
+@pytest.mark.parametrize("case", _golden(),
+                         ids=[" ".join(c["argv"]) for c in _golden()])
+def test_legacy_invocation_resolves_identically(case):
+    cfg, got = _resolve(case["argv"])
+    assert got["resolved"] == case["resolved"], \
+        f"effective config drifted for {' '.join(case['argv'])}"
+    assert got["mode"] == case["mode"]
+    assert cfg.profile is None          # legacy flags never imply a profile
+
+
+# ------------------------------------------------- routing edges (no golden)
+def test_multi_without_budget_still_errors():
+    cfg, _ = None, None
+    args = build_parser().parse_args(["--multi", "a,b"])
+    # arch validation happens on resolve; use real names
+    args = build_parser().parse_args(["--multi", "qwen2.5-3b,gemma2-9b"])
+    cfg = resolve_config(env={}, cli=cli_overrides(args))
+    with pytest.raises(SystemExit, match="budget"):
+        dispatch_mode(cfg)
+
+
+def test_paged_without_budget_still_errors():
+    args = build_parser().parse_args(["--arch", "qwen2.5-3b", "--paged"])
+    cfg = resolve_config(env={}, cli=cli_overrides(args))
+    with pytest.raises(SystemExit, match="budget"):
+        dispatch_mode(cfg)
+
+
+def test_bare_invocation_still_demands_a_target():
+    cfg = resolve_config(env={}, cli=cli_overrides(
+        build_parser().parse_args([])))
+    with pytest.raises(SystemExit, match="--arch"):
+        dispatch_mode(cfg)
+
+
+def test_cli_arch_overrides_profile_models():
+    """--arch on top of a multi-model profile serves THAT model only (the
+    flags clear each other so CLI choices cleanly override profiles)."""
+    args = build_parser().parse_args(["--profile", "edge-tpu",
+                                      "--arch", "qwen2.5-3b"])
+    cfg = resolve_config(profile=args.profile, env={},
+                         cli=cli_overrides(args))
+    assert cfg.arch == "qwen2.5-3b" and cfg.models == []
+    args = build_parser().parse_args(["--profile", "mcu",
+                                      "--multi", "qwen2.5-3b,gemma2-9b"])
+    cfg = resolve_config(profile=args.profile, env={},
+                         cli=cli_overrides(args))
+    assert cfg.arch is None
+    assert cfg.models == ["qwen2.5-3b", "gemma2-9b"]
+
+
+def test_http_flag_routes_to_http_mode():
+    args = build_parser().parse_args(["--profile", "edge-tpu", "--http"])
+    cfg = resolve_config(profile=args.profile, env={},
+                         cli=cli_overrides(args))
+    assert dispatch_mode(cfg) == "http"

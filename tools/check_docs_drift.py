@@ -11,7 +11,15 @@ Checks, over README.md and docs/*.md:
     ``add_argument`` call in src/, benchmarks/, or tools/;
   * every backend key in ``STORE_BACKENDS`` is mentioned in README.md and
     docs/ARCHITECTURE.md (a new backend must be documented; a renamed one
-    fails the path/flag checks on the stale side).
+    fails the path/flag checks on the stale side);
+  * the serving-config surface stays honest both ways: every deployment
+    profile in ``repro.config.PROFILES`` is documented in README.md AND
+    docs/ARCHITECTURE.md, every ``profile:<name>`` / ``SWAPNET_*`` token
+    the docs mention exists in code, every documented dotted config key
+    (``runtime.budget_mb`` style) is a real ``ServeConfig`` field, and the
+    HTTP endpoint tables match ``repro.serving.control_plane.ENDPOINTS``
+    exactly (both directions: undocumented endpoint = drift, documented
+    ghost endpoint = drift).
 
 Docs rot silently: a rename refactor updates every import but no grep hits
 the prose. This runs in CI next to the test suite so the rename PR is the
@@ -103,6 +111,66 @@ def looks_like_path(tok: str) -> bool:
         and not tok.startswith(("http", "0.", "1.")))
 
 
+def check_serving_config(readme: str, arch: str) -> list[str]:
+    """Profiles, config keys, env vars, and HTTP endpoints: docs <-> code,
+    both directions."""
+    from repro.config import ENV_PREFIX, config_fields, profile_names
+    from repro.serving.control_plane import ENDPOINTS
+    errors: list[str] = []
+    fields = config_fields()
+    known_profiles = set(profile_names())
+    env_map = {ENV_PREFIX + path.replace(".", "_").upper()
+               for path in fields}
+    env_map.add(ENV_PREFIX + "PROFILE")
+
+    for name, text in [("README.md", readme), ("docs/ARCHITECTURE.md", arch)]:
+        # every shipped profile must be documented...
+        for prof in sorted(known_profiles):
+            if not re.search(rf"`{re.escape(prof)}`", text):
+                errors.append(f"{name}: deployment profile `{prof}` "
+                              f"(repro.config.PROFILES) is undocumented")
+        toks = backtick_tokens(text)
+        for tok in toks:
+            tok = tok.strip().rstrip(".,;:")
+            # ...and every documented profile/env/config token must exist
+            m = re.match(r"^profile:([\w-]+)$", tok)
+            if m and m.group(1) not in known_profiles:
+                errors.append(f"{name}: unknown profile `{m.group(1)}`")
+            for var in re.findall(rf"\b({ENV_PREFIX}[A-Z0-9_]+)\b", tok):
+                if "<" in tok:          # template spellings like
+                    continue            # SWAPNET_<SECTION>_<KEY>
+                if var not in env_map:
+                    errors.append(f"{name}: env var `{var}` is not a "
+                                  f"ServeConfig field")
+            m = re.match(r"^(workload|runtime|scheduler|http)\.(\w+)$", tok)
+            if m and m.group(2) != "py" and tok not in fields:
+                # (module-map lines like `runtime.py` are paths, not keys)
+                errors.append(f"{name}: config key `{tok}` is not a "
+                              f"ServeConfig field")
+
+    # endpoint tables: exact two-way match against the code's contract
+    code_eps = {(meth, path) for meth, path in ENDPOINTS}
+    for name, text in [("README.md", readme), ("docs/ARCHITECTURE.md", arch)]:
+        doc_eps = set()
+        for meth, path in re.findall(
+                r"(GET|POST)\W+`(/[\w/<>.-]*)`", text):
+            doc_eps.add((meth, path))
+        for meth, path in re.findall(            # README prose spelling:
+                r"`(GET|POST) (/[\w/<>.-]*)`", text):   # `GET /healthz`
+            doc_eps.add((meth, path))
+        if not doc_eps:
+            errors.append(f"{name}: no HTTP endpoint reference found "
+                          f"(expected the control-plane endpoints)")
+            continue
+        for ep in sorted(code_eps - doc_eps):
+            errors.append(f"{name}: endpoint {ep[0]} {ep[1]} "
+                          f"(control_plane.ENDPOINTS) is undocumented")
+        for ep in sorted(doc_eps - code_eps):
+            errors.append(f"{name}: documents endpoint {ep[0]} {ep[1]} "
+                          f"which the control plane does not serve")
+    return errors
+
+
 def main() -> int:
     flags = defined_flags()
     errors: list[str] = []
@@ -129,6 +197,8 @@ def main() -> int:
             if not re.search(rf"`{backend}`", text):
                 errors.append(f"{name}: store backend `{backend}` "
                               f"(STORE_BACKENDS) is undocumented")
+
+    errors += check_serving_config(readme, arch)
 
     if errors:
         print(f"docs drift: {len(errors)} problem(s)")

@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""End-to-end smoke of the HTTP control plane (CI's serving gate).
+
+Boots ``python -m repro.launch.serve --profile <p> --http`` as a real
+subprocess, then exercises the full remote lifecycle a fleet driver uses:
+
+  1. parse the ``[serve-http] listening on http://...`` line;
+  2. ``GET /healthz``            -> status ok, every model up;
+  3. ``POST /v1/submit``         -> rid; poll ``GET /v1/requests/<rid>``
+     until ``done``; latency must be the scheduler's own (> 0);
+  4. ``POST /v1/submit`` + immediate cancel -> ``cancelled`` status
+     (either on the cancel reply or, if an executor won the race, the
+     request simply completes — both are legal);
+  5. ``GET /metrics``            -> Prometheus text: required families
+     present, completed-request count consistent with what we submitted;
+  6. ``POST /v1/shutdown``       -> process exits 0 within the deadline.
+
+Stdlib only (urllib), same as the control plane itself. Exit code 0 =
+healthy; any assertion prints a diagnostic and exits 1.
+
+Usage::
+
+    PYTHONPATH=src python tools/http_smoke.py [--profile edge-tpu]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import urllib.request
+
+REQUIRED_FAMILIES = (
+    "swapnet_ledger_occupancy",
+    "swapnet_cache_hit_rate",
+    "swapnet_requests_completed_total",
+    "swapnet_request_latency_seconds",
+    "swapnet_model_up",
+    "swapnet_http_requests_total",
+)
+
+
+def call(base: str, path: str, body=None, timeout: float = 30.0):
+    req = urllib.request.Request(
+        base + path,
+        data=(json.dumps(body).encode() if body is not None else None),
+        headers={"Content-Type": "application/json"},
+        method="POST" if body is not None else "GET")
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        raw = resp.read()
+        ctype = resp.headers.get("Content-Type", "")
+        return raw.decode() if "text/plain" in ctype else json.loads(raw)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default="edge-tpu")
+    ap.add_argument("--boot-timeout", type=float, default=600.0,
+                    help="seconds to wait for the listening line (model "
+                         "build + jit warmup happen before bind)")
+    args = ap.parse_args()
+
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--profile", args.profile, "--http", "--http-port", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    base = None
+    deadline = time.monotonic() + args.boot_timeout
+    lines = []
+    try:
+        while time.monotonic() < deadline:
+            line = proc.stdout.readline()
+            if not line and proc.poll() is not None:
+                break
+            lines.append(line)
+            m = re.search(r"listening on (http://[\w.:]+)", line)
+            if m:
+                base = m.group(1)
+                break
+        assert base, f"no listening line within {args.boot_timeout}s:\n" \
+                     + "".join(lines[-20:])
+        print(f"[http-smoke] serving at {base}")
+
+        health = call(base, "/healthz")
+        assert health["status"] == "ok", health
+        assert health["models"] and all(health["models"].values()), health
+        model = sorted(health["models"])[0]
+        print(f"[http-smoke] healthz ok, models: {sorted(health['models'])}")
+
+        sub = call(base, "/v1/submit",
+                   {"model": model, "requests": 2, "prompt_len": 16,
+                    "seed": 7, "priority": 8.0})
+        rid = sub["rid"]
+        poll_deadline = time.monotonic() + 300
+        while time.monotonic() < poll_deadline:
+            status = call(base, f"/v1/requests/{rid}")
+            if status["status"] != "pending":
+                break
+            time.sleep(0.05)
+        assert status["status"] == "done", status
+        assert status["latency_s"] > 0, status
+        assert status["logits_shape"][0] == 2, status
+        print(f"[http-smoke] rid {rid} done in {status['latency_s']*1e3:.1f} "
+              f"ms (scheduler's own latency), "
+              f"logits_shape={status['logits_shape']}")
+
+        sub2 = call(base, "/v1/submit",
+                    {"model": model, "requests": 1, "prompt_len": 8})
+        cancel = call(base, f"/v1/requests/{sub2['rid']}/cancel", {})
+        status2 = call(base, f"/v1/requests/{sub2['rid']}")
+        if cancel["cancelled"]:
+            assert status2["status"] == "cancelled", status2
+            print(f"[http-smoke] rid {sub2['rid']} cancelled cleanly")
+        else:       # executor won the race: it must then complete normally
+            while status2["status"] == "pending" \
+                    and time.monotonic() < poll_deadline:
+                time.sleep(0.05)
+                status2 = call(base, f"/v1/requests/{sub2['rid']}")
+            assert status2["status"] == "done", status2
+            print(f"[http-smoke] rid {sub2['rid']} raced cancel, completed")
+
+        text = call(base, "/metrics")
+        missing = [f for f in REQUIRED_FAMILIES if f"\n{f}" not in text
+                   and not text.startswith(f)]
+        assert not missing, f"missing metric families: {missing}"
+        done_total = sum(
+            float(m.group(1)) for m in re.finditer(
+                r'^swapnet_requests_completed_total\{[^}]*\} ([\d.e+-]+)$',
+                text, re.M))
+        assert done_total >= 1, text
+        print(f"[http-smoke] /metrics ok ({len(text.splitlines())} lines, "
+              f"{done_total:g} completed requests)")
+
+        call(base, "/v1/shutdown", {})
+        proc.wait(timeout=120)
+        assert proc.returncode == 0, \
+            f"server exited {proc.returncode}:\n{proc.stdout.read()}"
+        print("[http-smoke] clean shutdown — PASS")
+        return 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
