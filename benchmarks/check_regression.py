@@ -24,11 +24,27 @@ the continuous-batching point). Per {b1, b8} arm:
     — batching that no longer amortizes the weight stream is the one
     regression this subsystem exists to prevent.
 
+Three further sections close the coverage gap (every CI bench arm is now
+gated, not just uploaded):
+
+  * ``mixed_precision`` (inside the swap-store file) — absolute,
+    deterministic invariants: the calibrated plan meets the committed
+    fidelity target where uniform int4 violates it, packs strictly more
+    layers per block than uniform int8, and swaps strictly fewer bytes
+    than int8 / more than int4;
+  * ``multi_tenant`` (``bench_multi_tenant --smoke``) — scheduled-arm
+    hi-class p99 vs baseline at a widened tolerance, the
+    ``hi_p99_speedup`` floor, per-arm ``budget_ok``, and the decode-heavy
+    mix's ``kv_pool_clean``;
+  * ``fleet`` (``bench_fleet --smoke``) — ``cold_over_warm`` ceiling plus
+    the ``ledger_clean`` / ``budget_ok`` / ``clean_shutdown`` verdicts.
+
 A missing arm in the fresh output is itself a regression (the matrix
 silently shrank). ``--update`` MERGES the fresh section(s) into the
 baseline — each fresh file refreshes only the section it produces, so
-re-recording the swap-store matrix does not silently drop the decode
-point (run it locally after an INTENTIONAL perf change and commit).
+re-recording the swap-store matrix does not silently drop the decode,
+multi-tenant, or fleet points (run it locally after an INTENTIONAL perf
+change and commit).
 
 Exit status: 0 clean, 1 regression — wire it as a CI step after the bench.
 """
@@ -57,6 +73,21 @@ DECODE_SPEEDUP_MIN = 2.0
 # ladder gone quadratic or a fault served as latency instead of retried —
 # both blow past any small multiple.
 CHAOS_P99_INFLATION_MAX = 5.0
+# multi-tenant section (bench_multi_tenant --smoke): the scheduler must
+# keep beating the serialized arm on hi-class tail latency by at least
+# this factor — the subsystem's reason to exist. The hi p99 itself diffs
+# against the baseline at a WIDER tolerance than swap_in_ms: a small-n
+# p99 is max-dominated scheduler noise.
+MULTI_TENANT_HI_SPEEDUP_MIN = 1.1
+MULTI_TENANT_P99_TOL_FACTOR = 2.0
+# fleet section (bench_fleet --smoke): a runtime-registered model's cold
+# first request must stay within this multiple of its warm p50 — a
+# blown-out ratio means registration stopped pre-paging / replanning.
+FLEET_COLD_OVER_WARM_MAX = 5.0
+# mixed_precision section (bench_overhead, the calibrated arm): gated
+# ABSOLUTELY on the fresh run — the separation it must demonstrate is
+# deterministic (fixed plan DelayModel + exact bytes), so any flip is a
+# calibration/policy/store behaviour change, never noise.
 
 
 def compare(baseline: Dict, fresh: Dict,
@@ -95,6 +126,124 @@ def compare(baseline: Dict, fresh: Dict,
     violations += compare_decode(baseline.get("decode"), fresh.get("decode"),
                                  latency_tol)
     violations += compare_chaos(fresh.get("chaos"))
+    violations += compare_mixed(baseline.get("mixed_precision"),
+                                fresh.get("mixed_precision"))
+    violations += compare_multi_tenant(baseline.get("multi_tenant"),
+                                       fresh.get("multi_tenant"),
+                                       latency_tol)
+    violations += compare_fleet(baseline.get("fleet"), fresh.get("fleet"))
+    return violations
+
+
+def compare_mixed(base: Dict | None, new: Dict | None) -> List[str]:
+    """Mixed-precision invariants (absolute on the fresh run): the
+    calibrated plan must MEET the committed fidelity target where uniform
+    int4 VIOLATES it, pack strictly more layers per block than uniform
+    int8, and land its swap traffic strictly between the two uniform
+    points. All four quantities are deterministic — bytes come from the
+    store format x plan and packing from a fixed-coefficient planner — so
+    the section needs no baseline diff, only the section's presence once
+    the baseline era includes it."""
+    if new is None:
+        return ["mixed_precision: section missing from fresh results"] \
+            if base is not None else []
+    violations = []
+    tgt = new["fidelity_target"]
+    if not new["mixed"]["meets_target"]:
+        violations.append(
+            f"mixed_precision.mixed.rel_err: {new['mixed']['rel_err']:.4f} "
+            f"> {tgt:g} target (the calibrated plan no longer meets its "
+            f"own fidelity target)")
+    if new["int4"]["meets_target"]:
+        violations.append(
+            f"mixed_precision.int4.rel_err: {new['int4']['rel_err']:.4f} "
+            f"<= {tgt:g} target (uniform int4 meets the target — the arm "
+            f"no longer demonstrates a separation; tighten the target)")
+    lpb_mixed = new["mixed"]["layers_per_block"]
+    lpb_int8 = new["int8"]["layers_per_block"]
+    if not lpb_mixed > lpb_int8:
+        violations.append(
+            f"mixed_precision.layers_per_block: mixed {lpb_mixed:.2f} !> "
+            f"int8 {lpb_int8:.2f} (the plan stopped buying packing "
+            f"density)")
+    b4, bm, b8 = (new[a]["bytes_swapped"] for a in ("int4", "mixed", "int8"))
+    if not b4 < bm < b8:
+        violations.append(
+            f"mixed_precision.bytes_swapped: int4 {b4} / mixed {bm} / "
+            f"int8 {b8} — mixed must sit strictly between the uniform "
+            f"points")
+    return violations
+
+
+def compare_multi_tenant(base: Dict | None, new: Dict | None,
+                         latency_tol: float = 0.2) -> List[str]:
+    """Multi-tenant serving regressions: the hi-class p99 of the scheduled
+    arm diffs against the baseline (at a widened tolerance — small-n p99),
+    the hi_p99_speedup floor and every arm's ledger verdict are absolute
+    on the fresh run, and the decode-heavy mix must return its KV pool
+    clean."""
+    if base is None:
+        return []
+    if new is None:
+        return ["multi_tenant: section missing from fresh results"]
+    violations = []
+    tol = latency_tol * MULTI_TENANT_P99_TOL_FACTOR
+    b = base["arms"].get("scheduled", {}).get(
+        "classes", {}).get("hi", {}).get("p99_ms")
+    n = new.get("arms", {}).get("scheduled", {}).get(
+        "classes", {}).get("hi", {}).get("p99_ms")
+    if b is not None:
+        if n is None:
+            violations.append("multi_tenant.scheduled.hi.p99_ms: missing "
+                              "from fresh results")
+        elif n > b * (1.0 + tol):
+            violations.append(
+                f"multi_tenant.scheduled.hi.p99_ms: {b:.0f} -> {n:.0f} ms "
+                f"(+{(n / b - 1.0) * 100:.0f}% > +{tol * 100:.0f}% "
+                f"tolerance)")
+    sp = new.get("hi_p99_speedup", 0.0)
+    if sp < MULTI_TENANT_HI_SPEEDUP_MIN:
+        violations.append(
+            f"multi_tenant.hi_p99_speedup: {sp:.2f}x < "
+            f"{MULTI_TENANT_HI_SPEEDUP_MIN:.1f}x floor (the scheduler no "
+            f"longer protects the hi class from the serialized tail)")
+    for arm, a in sorted(new.get("arms", {}).items()):
+        if not a.get("budget_ok", True):
+            violations.append(
+                f"multi_tenant.{arm}: ledger peak exceeded the budget "
+                f"({a.get('peak_resident_mb')} MB)")
+    dh = new.get("decode_heavy")
+    if dh is not None:
+        if not dh.get("budget_ok", True):
+            violations.append(
+                f"multi_tenant.decode_heavy: ledger peak exceeded the "
+                f"budget ({dh.get('peak_resident_mb')} MB)")
+        if not dh.get("kv_pool_clean", True):
+            violations.append(
+                "multi_tenant.decode_heavy.kv_pool_clean: false (KV pages "
+                "leaked across the decode mix)")
+    return violations
+
+
+def compare_fleet(base: Dict | None, new: Dict | None) -> List[str]:
+    """Fleet-over-HTTP invariants (absolute on the fresh run): runtime
+    model arrival must stay usably warm (cold/warm ratio ceiling) and the
+    run must hand back a clean ledger, in-budget peak, and a clean
+    shutdown."""
+    if base is None:
+        return []
+    if new is None:
+        return ["fleet: section missing from fresh results"]
+    violations = []
+    ratio = new.get("arrival", {}).get("cold_over_warm", 0.0)
+    if ratio > FLEET_COLD_OVER_WARM_MAX:
+        violations.append(
+            f"fleet.arrival.cold_over_warm: {ratio:.2f}x > "
+            f"{FLEET_COLD_OVER_WARM_MAX:.1f}x ceiling (runtime "
+            f"registration stopped pre-warming the new model)")
+    for key in ("ledger_clean", "budget_ok", "clean_shutdown"):
+        if not new.get(key, True):
+            violations.append(f"fleet.{key}: false")
     return violations
 
 
@@ -177,6 +326,15 @@ def main() -> None:
                     default=os.path.join(RESULTS_DIR, "BENCH_decode.json"),
                     help="bench_decode output attached as the fresh "
                          "'decode' section (skipped when absent)")
+    ap.add_argument("--fresh-multi-tenant",
+                    default=os.path.join(RESULTS_DIR,
+                                         "BENCH_multi_tenant.json"),
+                    help="bench_multi_tenant output attached as the fresh "
+                         "'multi_tenant' section (skipped when absent)")
+    ap.add_argument("--fresh-fleet",
+                    default=os.path.join(RESULTS_DIR, "BENCH_fleet.json"),
+                    help="bench_fleet output attached as the fresh "
+                         "'fleet' section (skipped when absent)")
     ap.add_argument("--latency-tol", type=float,
                     default=float(os.environ.get("BENCH_LATENCY_TOL", "0.2")),
                     help="allowed fractional swap-in latency growth "
@@ -187,6 +345,9 @@ def main() -> None:
                          "(after an intentional perf change; commit it)")
     args = ap.parse_args()
 
+    section_files = (("decode", args.fresh_decode),
+                     ("multi_tenant", args.fresh_multi_tenant),
+                     ("fleet", args.fresh_fleet))
     if args.update:
         with open(args.fresh) as fh:
             merged = json.load(fh)
@@ -195,25 +356,26 @@ def main() -> None:
                 old = json.load(fh)
             for k, v in old.items():
                 merged.setdefault(k, v)
-        if os.path.exists(args.fresh_decode):
-            with open(args.fresh_decode) as fh:
-                merged["decode"] = json.load(fh)
+        used = [args.fresh]
+        for section, path in section_files:
+            if os.path.exists(path):
+                with open(path) as fh:
+                    merged[section] = json.load(fh)
+                used.append(path)
         with open(args.baseline, "w") as fh:
             json.dump(merged, fh, indent=2, sort_keys=True)
             fh.write("\n")
-        print(f"baseline merged from {args.fresh}"
-              + (f" + {args.fresh_decode}"
-                 if os.path.exists(args.fresh_decode) else "")
-              + f" -> {args.baseline}")
+        print(f"baseline merged from {' + '.join(used)} -> {args.baseline}")
         return
 
     with open(args.baseline) as fh:
         baseline = json.load(fh)
     with open(args.fresh) as fh:
         fresh = json.load(fh)
-    if os.path.exists(args.fresh_decode):
-        with open(args.fresh_decode) as fh:
-            fresh["decode"] = json.load(fh)
+    for section, path in section_files:
+        if os.path.exists(path):
+            with open(path) as fh:
+                fresh[section] = json.load(fh)
     violations = compare(baseline, fresh, args.latency_tol)
     if violations:
         print(f"PERF REGRESSION vs {args.baseline} "
@@ -222,14 +384,27 @@ def main() -> None:
             print(f"  {v}")
         sys.exit(1)
     n_arms = sum(len(r) for r in baseline["backends"].values())
-    decode_note = ""
+    notes = ""
     if "decode" in baseline and "decode" in fresh:
-        decode_note = (f"; decode b8/b1="
-                       f"{fresh['decode']['speedup_b8_over_b1']:.2f}x "
-                       f"(floor {DECODE_SPEEDUP_MIN:.1f}x)")
+        notes += (f"; decode b8/b1="
+                  f"{fresh['decode']['speedup_b8_over_b1']:.2f}x "
+                  f"(floor {DECODE_SPEEDUP_MIN:.1f}x)")
+    if "mixed_precision" in fresh:
+        mp = fresh["mixed_precision"]
+        notes += (f"; mixed {mp['mixed']['layers_per_block']:.1f} vs int8 "
+                  f"{mp['int8']['layers_per_block']:.1f} layers/block @ "
+                  f"fidelity {mp['fidelity_target']:g}")
+    if "multi_tenant" in baseline and "multi_tenant" in fresh:
+        notes += (f"; multi-tenant hi p99 speedup "
+                  f"{fresh['multi_tenant']['hi_p99_speedup']:.2f}x "
+                  f"(floor {MULTI_TENANT_HI_SPEEDUP_MIN:.1f}x)")
+    if "fleet" in baseline and "fleet" in fresh:
+        notes += (f"; fleet cold/warm "
+                  f"{fresh['fleet']['arrival']['cold_over_warm']:.2f}x "
+                  f"(ceiling {FLEET_COLD_OVER_WARM_MAX:.1f}x)")
     print(f"perf gate clean: {len(baseline['backends'])} backends, "
           f"{n_arms} arms within +{args.latency_tol * 100:.0f}% latency / "
-          f"exact bytes of {args.baseline}{decode_note}")
+          f"exact bytes of {args.baseline}{notes}")
 
 
 if __name__ == "__main__":

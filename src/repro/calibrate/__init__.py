@@ -1,0 +1,113 @@
+"""Calibration pass + precision policy for per-unit mixed-precision swapping.
+
+The end-to-end flow (``--precision mixed --fidelity 1e-2``):
+
+1. :func:`profiler.profile_model` / :func:`profiler.profile_sequential`
+   measure each swap unit's output error at int8 and int4 on a small
+   calibration batch (versioned ``SensitivityProfile`` artifact).
+2. :func:`policy.assign_precisions` solves the knapsack-style per-unit
+   int4/int8/fp assignment against a fidelity target
+   (:class:`policy.PrecisionPlan`).
+3. ``QuantizedStore(plan=...)`` writes each unit at its assigned bits;
+   ``cost_model.resident_infos`` + the planner then pack more layers per
+   block wherever int4 was safe; SwapStats reports ``bytes_by_precision``.
+
+:func:`calibrate_model` bundles 1+2 for a repro model (it builds a
+throwaway LOSSLESS swapped instance to measure on — calibration must see
+exact weights, not the quantized store it is about to parameterize).
+``python -m repro.calibrate`` is the CLI wrapper.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.calibrate.policy import (PLAN_VERSION, PRECISION_BITS,
+                                    PRECISION_LADDER, PrecisionPlan,
+                                    assign_precisions)
+from repro.calibrate.profiler import (PROFILE_VERSION, SensitivityProfile,
+                                      profile_model, profile_sequential,
+                                      quantize_roundtrip,
+                                      quantize_unit_params,
+                                      unit_precision_bytes)
+
+__all__ = [
+    "PLAN_VERSION", "PROFILE_VERSION", "PRECISION_BITS", "PRECISION_LADDER",
+    "PrecisionPlan", "SensitivityProfile", "assign_precisions",
+    "calibrate_model", "calibrate_sequential", "calibration_batch",
+    "profile_model", "profile_sequential", "quantize_roundtrip",
+    "quantize_unit_params", "unit_precision_bytes",
+]
+
+# small by design: calibration rides the production swap path, so batch
+# cost is (1 + 2q) swapped passes — keep the batch tiny
+CALIB_BATCH, CALIB_SEQ = 2, 16
+
+
+def calibration_batch(cfg, batch: int = CALIB_BATCH, seq: int = CALIB_SEQ,
+                      seed: int = 0) -> dict:
+    """Deterministic synthetic prefill batch for an arch (token models get
+    uniform token ids, feature models get unit-normal frontend inputs)."""
+    rng = np.random.default_rng(seed)
+    if cfg.embed_inputs:
+        return {"tokens": rng.integers(
+            0, cfg.vocab_size, (batch, seq)).astype(np.int32)}
+    return {"features": rng.standard_normal(
+        (batch, seq, cfg.d_frontend)).astype(np.float32)}
+
+
+def calibrate_sequential(sw, x, fidelity: float, method: str = "output",
+                         seed: int = 0, min_quant_size: int = 1024,
+                         headroom: float = 0.7
+                         ) -> Tuple[SensitivityProfile, PrecisionPlan]:
+    """Profile + assign for a SwappedSequential (bench/scenario path)."""
+    prof = profile_sequential(sw, x, method=method, seed=seed,
+                              min_quant_size=min_quant_size)
+    return prof, assign_precisions(prof, fidelity, headroom=headroom)
+
+
+def calibrate_model(model, params: dict, fidelity: float,
+                    batch: Optional[dict] = None, method: str = "output",
+                    seed: int = 0, name: Optional[str] = None,
+                    budget: Optional[int] = None, dm=None,
+                    prefetch_depth: int = 2, min_quant_size: int = 1024,
+                    headroom: float = 0.7, workdir: Optional[str] = None
+                    ) -> Tuple[SensitivityProfile, PrecisionPlan]:
+    """Profile + assign for a repro model.
+
+    Builds a throwaway MMAP SwappedModel (same ``name`` namespace, so the
+    returned plan's unit keys match the quant store the caller builds next)
+    and sweeps it with :func:`profiler.profile_model`. ``budget``/``dm``
+    partition the throwaway instance when given; otherwise every unit is
+    its own block — fine for calibration, whose outputs are plan keys and
+    errors, not latencies.
+    """
+    from repro.core.cost_model import DelayModel
+    from repro.core.runtime import SwappedModel
+
+    if batch is None:
+        batch = calibration_batch(model.cfg, seed=seed)
+    tmp = None
+    if workdir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="calibrate_")
+        workdir = tmp.name
+    sm = SwappedModel(model, params, os.path.join(workdir, "calib_store"),
+                      prefetch_depth=prefetch_depth, name=name,
+                      store_backend="mmap")
+    try:
+        if budget is not None:
+            first = next(iter(batch.values()))
+            sm.partition(budget, dm or DelayModel(),
+                         int(first.shape[0]), int(first.shape[1]))
+        else:
+            sm.set_plan(tuple(range(1, len(sm.units))))
+        prof = profile_model(sm, batch, method=method, seed=seed,
+                             min_quant_size=min_quant_size)
+    finally:
+        sm.close()
+        if tmp is not None:
+            tmp.cleanup()
+    return prof, assign_precisions(prof, fidelity, headroom=headroom)

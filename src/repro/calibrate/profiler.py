@@ -1,0 +1,256 @@
+"""Per-unit quantization-sensitivity profiler (mixed-precision tentpole).
+
+Answers one question per (swap unit, candidate precision): if ONLY this
+unit's quantizable leaves round-trip through int8 / packed int4 — exactly
+the transform ``QuantizedStore`` applies at build time — how far does the
+MODEL OUTPUT move? The per-unit answers feed policy.assign_precisions,
+which spends the fidelity budget where bytes buy the least error.
+
+Two measurement methods:
+
+* ``output`` — the reference method. One clean swapped pass records the
+  reference output, then one pass per (unit x precision) with that unit's
+  params replaced by their host quantize->dequantize round-trip (via the
+  executors' ``param_override`` hook, so the sweep runs block-by-block
+  under the same budget as production — ``forward_partial`` on the model
+  path). Error = relative L2 at the model output. Cost: 1 + 2q passes for
+  q quantizable units, on a SMALL calibration batch.
+* ``weight`` — the cheap proxy (Fisher/grad-norm style, with the gradient
+  replaced by the identity): relative Frobenius perturbation
+  ``||W - Wq||_F / ||W||_F`` per unit. No forward passes at all; first-order
+  correct when units contribute error roughly proportionally to their
+  relative weight perturbation. Use it when even the small calibration
+  sweep is too slow (fleet-scale registration).
+
+The result persists as a versioned JSON artifact keyed by arch + unit/leaf
+shapes + method + seed (``SensitivityProfile``), so a saved profile is
+rejected rather than silently misapplied when the model it was measured on
+changes shape.
+"""
+from __future__ import annotations
+
+import json
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.kernels.dequant import (quantize_int4, quantize_int8,
+                                   unpack_int4)
+from repro.store.quantized_store import quantizable, unit_stored_nbytes
+
+PROFILE_VERSION = 1
+CANDIDATE_BITS = {"int8": 8, "int4": 4}
+
+
+# --------------------------------------------------------------- round-trip
+def quantize_roundtrip(arr: np.ndarray, bits: int) -> np.ndarray:
+    """Host quantize -> dequantize mirroring the store's numerics exactly
+    (same quantizers, same fp32 multiply), so measured sensitivity is the
+    sensitivity the quant store will realize."""
+    x = np.asarray(arr)
+    if bits == 8:
+        q, scales = quantize_int8(x)
+        vals = q
+    elif bits == 4:
+        carrier, scales = quantize_int4(x)
+        rows = int(np.prod(x.shape[:-1])) if x.ndim >= 2 else 1
+        vals = unpack_int4(carrier, rows)
+    else:
+        raise ValueError(f"bits must be 8 or 4 (got {bits})")
+    out = np.multiply(vals, scales[None, :], dtype=np.float32)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def quantize_unit_params(params, bits: int, min_quant_size: int = 1024):
+    """Round-trip every leaf the quant store would quantize; other leaves
+    pass through untouched (the store keeps them raw)."""
+    return jax.tree.map(
+        lambda a: (quantize_roundtrip(np.asarray(a), bits)
+                   if quantizable(np.asarray(a), min_quant_size)
+                   else np.asarray(a)),
+        params)
+
+
+def unit_precision_bytes(params, min_quant_size: int = 1024) -> Dict[str, int]:
+    """Stored bytes of one unit at each candidate precision (exact: matches
+    the quant store's aligned segment layout byte-for-byte)."""
+    return {"fp": unit_stored_nbytes(params, 0, min_quant_size),
+            "int8": unit_stored_nbytes(params, 8, min_quant_size),
+            "int4": unit_stored_nbytes(params, 4, min_quant_size)}
+
+
+def _rel_l2(y, y_ref) -> float:
+    a = np.asarray(y, np.float64).ravel()
+    b = np.asarray(y_ref, np.float64).ravel()
+    denom = float(np.linalg.norm(b))
+    return float(np.linalg.norm(a - b)) / (denom if denom > 0.0 else 1.0)
+
+
+def _weight_err(params, bits: int, min_quant_size: int) -> float:
+    """``weight`` proxy: relative Frobenius perturbation over the unit."""
+    num = den = 0.0
+    for leaf in jax.tree.leaves(params):
+        arr = np.asarray(leaf)
+        if not np.issubdtype(arr.dtype, np.floating):
+            continue
+        x = arr.astype(np.float64)
+        den += float(np.sum(x * x))
+        if quantizable(arr, min_quant_size):
+            d = (quantize_roundtrip(arr, bits).astype(np.float64) - x)
+            num += float(np.sum(d * d))
+    return (num / den) ** 0.5 if den > 0.0 else 0.0
+
+
+def _unit_signature(name: str, params) -> str:
+    leaves = jax.tree.leaves(params)
+    sig = [f"{np.asarray(a).shape}:{np.asarray(a).dtype}" for a in leaves]
+    return f"{name}|" + ",".join(sig)
+
+
+# ----------------------------------------------------------------- artifact
+@dataclass
+class SensitivityProfile:
+    """Versioned calibration artifact: per-unit error at each candidate
+    precision plus the exact stored-bytes table the policy packs against."""
+    arch: str
+    method: str                          # output | weight
+    seed: int
+    signature: str                       # digest of arch + unit/leaf shapes
+    units: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    batch_shape: tuple = ()
+    version: int = PROFILE_VERSION
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": self.version,
+            "arch": self.arch,
+            "method": self.method,
+            "seed": self.seed,
+            "signature": self.signature,
+            "batch_shape": list(self.batch_shape),
+            "units": {n: dict(sorted(u.items()))
+                      for n, u in sorted(self.units.items())},
+        }, sort_keys=True, separators=(",", ":"))
+
+    @classmethod
+    def from_json(cls, s: str) -> "SensitivityProfile":
+        d = json.loads(s)
+        if d.get("version") != PROFILE_VERSION:
+            raise ValueError(f"SensitivityProfile version {d.get('version')!r}"
+                             f" != supported {PROFILE_VERSION}")
+        return cls(arch=d["arch"], method=d["method"], seed=int(d["seed"]),
+                   signature=d["signature"],
+                   units={n: dict(u) for n, u in d["units"].items()},
+                   batch_shape=tuple(d.get("batch_shape", ())),
+                   version=int(d["version"]))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            fh.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "SensitivityProfile":
+        with open(path) as fh:
+            return cls.from_json(fh.read())
+
+
+def shape_signature(named_units) -> str:
+    """Digest over unit names + leaf shapes/dtypes: the key that pins a
+    saved profile to the exact model geometry it was measured on."""
+    h = hashlib.sha256()
+    for name, params in named_units:
+        h.update(_unit_signature(name, params).encode())
+        h.update(b";")
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------- profilers
+def _profile(named_units, run_clean, run_override, arch: str, method: str,
+             seed: int, min_quant_size: int,
+             batch_shape: tuple) -> SensitivityProfile:
+    """Shared sweep driver. ``run_clean()`` -> reference output;
+    ``run_override(name, qparams)`` -> output with one unit substituted.
+    Either may be None for method='weight' (never called)."""
+    prof = SensitivityProfile(
+        arch=arch, method=method, seed=seed,
+        signature=shape_signature(named_units), batch_shape=batch_shape)
+    y_ref = run_clean() if method == "output" else None
+    for name, params in named_units:
+        row: Dict[str, float] = dict(unit_precision_bytes(params,
+                                                          min_quant_size))
+        row = {f"bytes_{k}": int(v) for k, v in row.items()}
+        has_q = any(quantizable(np.asarray(a), min_quant_size)
+                    for a in jax.tree.leaves(params))
+        for prec, bits in CANDIDATE_BITS.items():
+            if not has_q:
+                err = 0.0
+            elif method == "weight":
+                err = _weight_err(params, bits, min_quant_size)
+            elif method == "output":
+                qp = quantize_unit_params(params, bits, min_quant_size)
+                err = _rel_l2(run_override(name, qp), y_ref)
+            else:
+                raise ValueError(f"unknown method {method!r}")
+            row[f"err_{prec}"] = err
+        prof.units[name] = row
+    return prof
+
+
+def profile_sequential(sw, x, method: str = "output", seed: int = 0,
+                       min_quant_size: int = 1024) -> SensitivityProfile:
+    """Profile a :class:`~repro.core.runtime.SwappedSequential` on input
+    ``x`` — the perturbed passes run through sw.forward via its
+    ``param_override`` hook, block-by-block under the executor's budget."""
+    assert sw.plan is not None, "call partition_with()/set_plan() first"
+    names = [n for n, _ in sw.named_units]
+
+    def run(override) -> np.ndarray:
+        sw.param_override = override
+        try:
+            y, _ = sw.forward(x)
+            return np.asarray(y)
+        finally:
+            sw.param_override = None
+
+    return _profile(
+        sw.named_units,
+        run_clean=lambda: run(None),
+        run_override=lambda name, qp, _n=names: run(
+            lambda i, p: qp if _n[i] == name else p),
+        arch="sequential", method=method, seed=seed,
+        min_quant_size=min_quant_size,
+        batch_shape=tuple(np.asarray(x).shape))
+
+
+def profile_model(sm, batch: dict, method: str = "output", seed: int = 0,
+                  min_quant_size: int = 1024) -> SensitivityProfile:
+    """Profile a :class:`~repro.core.runtime.SwappedModel` on a prefill
+    ``batch`` — unit names come back NAMESPACED exactly as the model's
+    store/planner see them, so the resulting plan keys line up."""
+    assert sm.plan is not None, "call partition()/set_plan() first"
+    seen, named = set(), []
+    for u in sm.units:                 # shared units appear once per use;
+        if u.name in seen:             # profile (and store) them once
+            continue
+        seen.add(u.name)
+        named.append((u.name, u.params))
+
+    def run(override) -> np.ndarray:
+        sm.param_override = override
+        try:
+            logits, _ = sm.forward(batch)
+            return np.asarray(logits)
+        finally:
+            sm.param_override = None
+
+    shape = tuple(np.asarray(next(iter(batch.values()))).shape)
+    return _profile(
+        named,
+        run_clean=lambda: run(None),
+        run_override=lambda name, qp: run(
+            lambda u, p: qp if u.name == name else p),
+        arch=sm.cfg.name, method=method, seed=seed,
+        min_quant_size=min_quant_size, batch_shape=shape)

@@ -25,19 +25,22 @@ __all__ = ["PROFILES", "profile_overlay", "profile_names"]
 PROFILES: Dict[str, dict] = {
     # Microcontroller-scale (the arxiv 2101.08744 extreme): single tenant,
     # single executor, a budget far below the model, every byte fought for —
-    # packed-int4 swap units through the fused dequant-matmul stream, a
-    # serial (m=1) pipeline (no RAM for a second in-flight block), and a
-    # minimal hot cache.
+    # a calibrated MIXED-precision store (per-unit int4/int8/fp from the
+    # sensitivity pass, repro/calibrate/) streams through the fused
+    # dequant-matmul, a serial (m=1) pipeline (no RAM for a second in-flight
+    # block), and a minimal hot cache.
     "mcu": {
-        "description": "MCU-scale: one tenant, 8 MB budget, packed-int4 "
-                       "quantized store, serial (m=1) pipeline",
+        "description": "MCU-scale: one tenant, 8 MB budget, calibrated "
+                       "mixed-precision quantized store, serial (m=1) "
+                       "pipeline",
         "overlay": {
             "arch": "qwen2.5-3b",
             "workload": {"requests": 2, "prompt_len": 16, "rounds": 2},
             "runtime": {
                 "budget_mb": 8.0,
                 "store": "quant",
-                "precision": "int4",
+                "precision": "mixed",
+                "fidelity": 2e-2,
                 "prefetch_depth": 1,
                 "cache_frac": 0.1,
                 "executors": 1,

@@ -41,7 +41,9 @@ REDUCE_PRESETS = ("smoke", "100m", "full")
 # the servable subset of repro.store.STORE_BACKENDS: `faulty` is a test
 # wrapper (it needs an inner backend + fault schedule), not a deployment tier
 SERVE_STORES = ("mmap", "rawio", "quant", "directio")
-PRECISIONS = (None, "int8", "int4")
+# `mixed` = per-unit precision from a calibration pass (repro/calibrate/):
+# requires the quant store plus a runtime.fidelity target
+PRECISIONS = (None, "int8", "int4", "mixed")
 
 
 @dataclass
@@ -64,6 +66,7 @@ class RuntimeConfig:
     executors: int = 1
     store: str = "mmap"
     precision: Optional[str] = None     # None = the arch's swap_precision
+    fidelity: Optional[float] = None    # max rel-L2 output error (mixed)
     paged: bool = False
     kv_frac: float = 0.3
     page_tokens: int = 16
@@ -130,6 +133,17 @@ class ServeConfig:
             raise ConfigError(f"runtime.precision={rt.precision!r} is not "
                               f"one of {[p for p in PRECISIONS if p]} (or "
                               f"unset)")
+        if rt.fidelity is not None and rt.fidelity <= 0:
+            raise ConfigError(f"runtime.fidelity={rt.fidelity} must be > 0")
+        if rt.precision == "mixed":
+            if rt.store != "quant":
+                raise ConfigError("runtime.precision='mixed' requires "
+                                  "runtime.store='quant' (the plan "
+                                  "parameterizes the quantized store)")
+            if rt.fidelity is None:
+                raise ConfigError("runtime.precision='mixed' requires a "
+                                  "runtime.fidelity target (max rel-L2 "
+                                  "output error, e.g. 1e-2)")
         if rt.executors < 1:
             raise ConfigError(f"runtime.executors={rt.executors} must be >= 1")
         if rt.prefetch_depth < 1:

@@ -159,6 +159,13 @@ def resident_infos(infos: Sequence[LayerInfo], store,
     return out
 
 
+def packing_density(plan) -> float:
+    """Mean layers per block of a BlockPlan — the figure the mixed-precision
+    policy maximizes (more layers per block = fewer, larger, better-
+    overlapped swap-ins; see repro/calibrate/policy.py)."""
+    return plan.n_layers / plan.n_blocks
+
+
 # ---------------------------------------------------------------- info table
 def _matmul_params(tree) -> int:
     import jax

@@ -58,7 +58,10 @@ class MultiModelRuntime:
                  executors: int = 1,
                  reserve_timeout: Optional[float] = 30.0,
                  kv_frac: float = 0.0, page_tokens: int = 16,
-                 max_batch: int = 8):
+                 max_batch: int = 8,
+                 fidelity: Optional[float] = None,
+                 calib_method: str = "output",
+                 calib_seed: int = 0):
         assert 0.0 <= cache_frac < 1.0
         assert 0.0 <= kv_frac < 1.0 and cache_frac + kv_frac < 1.0
         self.budget = int(budget)
@@ -72,6 +75,12 @@ class MultiModelRuntime:
         self.mode = mode
         self.store_backend = store_backend
         self.precision = precision
+        # mixed-precision knobs: the fidelity target the auto-calibration in
+        # add_model solves against (see repro/calibrate/), plus the profiler
+        # method/seed so registration stays deterministic
+        self.fidelity = fidelity
+        self.calib_method = calib_method
+        self.calib_seed = int(calib_seed)
         self.prefetch_depth = max(prefetch_depth, 1)
         self.delta = delta
         self.executors = max(int(executors), 1)
@@ -102,7 +111,8 @@ class MultiModelRuntime:
                    executors=rt_cfg.executors,
                    kv_frac=rt_cfg.kv_frac if rt_cfg.paged else 0.0,
                    page_tokens=rt_cfg.page_tokens,
-                   max_batch=rt_cfg.max_batch)
+                   max_batch=rt_cfg.max_batch,
+                   fidelity=rt_cfg.fidelity)
 
     # ------------------------------------------------------------ registry
     def add_model(self, name: str, model: Model, params: dict,
@@ -116,9 +126,30 @@ class MultiModelRuntime:
         (int8 | int4) for the quant backend; ``store_options`` passes extra
         backend build options through (the faulty backend's ``inner`` /
         ``p`` / ``seed`` knobs — how the chaos suite wires fault injection
-        into ONE tenant of a shared-ledger runtime)."""
+        into ONE tenant of a shared-ledger runtime).
+
+        With ``precision='mixed'`` (per model or runtime-wide) and no
+        explicit ``plan`` in ``store_options``, registration runs the
+        calibration pass HERE — profile the arriving model on a synthetic
+        batch, solve the precision assignment against ``self.fidelity``,
+        and build the quant store from the resulting plan."""
         assert name not in self.models, f"duplicate model name {name!r}"
         backend = store_backend or self.store_backend
+        eff_precision = precision or self.precision
+        if (backend == "quant" and eff_precision == "mixed"
+                and model.cfg.quant_eligible
+                and (store_options or {}).get("plan") is None):
+            if self.fidelity is None:
+                raise ValueError(
+                    "precision='mixed' needs a fidelity target: construct "
+                    "the runtime with fidelity=... (runtime.fidelity)")
+            from repro.calibrate import calibrate_model
+            _, plan = calibrate_model(
+                model, params, fidelity=self.fidelity,
+                method=self.calib_method, seed=self.calib_seed, name=name,
+                prefetch_depth=self.prefetch_depth)
+            store_options = dict(store_options or {})
+            store_options["plan"] = plan
         sm = SwappedModel(model, params, os.path.join(workdir, name),
                           mode=self.mode, prefetch_depth=self.prefetch_depth,
                           ledger=self.ledger, cache=self.cache, name=name,
@@ -283,6 +314,8 @@ class MultiModelRuntime:
                 "bytes_logical_mb": st.bytes_logical / 1e6,
                 "bytes_resident_quantized_mb":
                     st.bytes_resident_quantized / 1e6,
+                "bytes_by_precision_mb": {
+                    p: b / 1e6 for p, b in st.bytes_by_precision.items()},
                 "vmem_working_set_mb": st.vmem_working_set / 1e6,
                 "store_backend": sm.store_backend,
                 "precision": sm.precision,

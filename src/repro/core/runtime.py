@@ -182,13 +182,16 @@ def store_opts(backend: str, gpu_dispatch: bool, precision: str = "int8",
     """Per-backend build options derived from the executor flags.
 
     For the quant backend, ``precision`` picks the swap-unit bit-width
-    (int8 | int4) and ``fused`` turns eager dequant OFF: units come back as
-    QuantizedTensor leaves that linear layers stream through the fused
-    dequant-matmul kernel (non-matmul consumers dequantize at use)."""
+    (int8 | int4, or ``mixed`` for a per-unit calibration plan — the plan
+    itself arrives via the ``store_options`` overlay as ``plan=...``, and
+    the store keeps any unit the plan omits raw) and ``fused`` turns
+    eager dequant OFF: units come back as QuantizedTensor leaves that
+    linear layers stream through the fused dequant-matmul kernel
+    (non-matmul consumers dequantize at use)."""
     if backend == "rawio":
         return {"gpu_dispatch": gpu_dispatch}
     if backend == "quant":
-        assert precision in ("int8", "int4"), precision
+        assert precision in ("int8", "int4", "mixed"), precision
         return {"bits": 4 if precision == "int4" else 8, "eager": not fused}
     if backend == "faulty":
         # chaos arm: fault injection over the zero-copy path by default;
@@ -204,7 +207,9 @@ def kernel_vmem_working_set(precision: str, dtype: str = "bfloat16",
     default tiling for a store precision (the figure SwapStats reports:
     the fused path shrinks the weight window 2x int8 / 4x int4)."""
     item = jnp.dtype(dtype).itemsize
-    w_bits = {"fp": None, "int8": 8, "int4": 4}[precision]
+    # "mixed" reports the int8 window: the CONSERVATIVE per-kernel figure
+    # (any int4-assigned unit streams a strictly smaller one)
+    w_bits = {"fp": None, "int8": 8, "int4": 4, "mixed": 8}[precision]
     return vmem_bytes(block_m, block_n, block_k, item, w_bits=w_bits)
 
 
@@ -236,6 +241,10 @@ class SwappedSequential:
         self.fused = fused and self.store_backend == "quant"
         opts = store_opts(self.store_backend, gpu_dispatch, precision, fused)
         opts.update(store_options or {})
+        if self.precision == "mixed" and opts.get("plan") is None:
+            raise ValueError("precision='mixed' needs a calibration plan: "
+                             "pass store_options={'plan': ...} "
+                             "(see repro.calibrate.calibrate_sequential)")
         self.store = build_store(self.named_units, workdir,
                                  backend=self.store_backend, **opts)
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
@@ -247,6 +256,11 @@ class SwappedSequential:
             self.precision if self.fused else "fp", "float32")
         self.plan: Optional[BlockPlan] = None
         self._block_fns: Dict[Tuple[int, int], Any] = {}
+        # calibration seam (repro/calibrate): fn(global_unit_index, params)
+        # -> params, applied on host after swap-in, before the jitted block
+        # fn — lets the sensitivity profiler substitute one unit's weights
+        # per pass while riding the production swap pipeline
+        self.param_override: Optional[Any] = None
 
     def _block_fn(self, lo: int, hi: int):
         """One jitted function per block (layers lo..hi fused): block
@@ -284,7 +298,11 @@ class SwappedSequential:
         for bi, lo, hi, handle in swap_schedule(eng, self.plan.blocks(),
                                                 names, self.plan.m):
             t0 = time.perf_counter()
-            x = self._block_fn(lo, hi)(handle.params, x)
+            ps = handle.params
+            if self.param_override is not None:
+                ps = [self.param_override(lo + off, p)
+                      for off, p in enumerate(ps)]
+            x = self._block_fn(lo, hi)(ps, x)
             x = jax.block_until_ready(x)
             eng.record_exec(time.perf_counter() - t0)
         total = time.perf_counter() - t_start
@@ -300,6 +318,7 @@ class SwappedSequential:
                    "bytes_swapped": st.bytes_swapped,
                    "bytes_logical": st.bytes_logical,
                    "bytes_resident_quantized": st.bytes_resident_quantized,
+                   "bytes_by_precision": dict(st.bytes_by_precision),
                    "vmem_working_set": st.vmem_working_set,
                    "retries": st.retries, "faults": dict(st.faults)}
 
@@ -352,6 +371,13 @@ class SwappedModel:
         opts = store_opts(self.store_backend, gpu_dispatch,
                           self.precision, fused=True)
         opts.update(store_options or {})
+        if self.precision == "mixed" and opts.get("plan") is None:
+            # a mixed store without a plan would silently store EVERY unit
+            # raw; the calibration pass must run first (multi_model and
+            # serve.py do this automatically)
+            raise ValueError("precision='mixed' needs a calibration plan: "
+                             "pass store_options={'plan': ...} "
+                             "(see repro.calibrate.calibrate_model)")
         self.store = build_store(store_units, workdir,
                                  backend=self.store_backend, **opts)
         self.engine = SwapEngine(self.store, mode=mode, budget=budget,
@@ -361,6 +387,9 @@ class SwappedModel:
             self.precision, self.cfg.dtype)
         self.plan: Optional[BlockPlan] = None
         self._jitted: Dict[str, Any] = {}
+        # calibration seam (repro/calibrate): fn(Unit, params) -> params,
+        # applied after swap-in inside forward_partial's unit loop
+        self.param_override: Optional[Any] = None
 
     # ------------------------------------------------------------ partition
     def partition(self, budget: int, dm: DelayModel, batch: int, seq: int,
@@ -589,6 +618,8 @@ class SwappedModel:
             for bi, lo, hi, handle in gen:
                 t0 = time.perf_counter()
                 for u, p in zip(self.units[lo:hi], handle.params):
+                    if self.param_override is not None:
+                        p = self.param_override(u, p)
                     state.x, state.positions = self._apply_unit(
                         u, p, state.x, state.positions, batch,
                         collect=state.caches)
@@ -623,6 +654,7 @@ class SwappedModel:
             "bytes_swapped": st.bytes_swapped,
             "bytes_logical": st.bytes_logical,
             "bytes_resident_quantized": st.bytes_resident_quantized,
+            "bytes_by_precision": dict(st.bytes_by_precision),
             "vmem_working_set": st.vmem_working_set,
             "retries": st.retries, "faults": dict(st.faults),
         }

@@ -408,6 +408,11 @@ class SwapStats:
     # The timeline gains "retry" spans covering each backoff sleep.
     retries: int = 0
     faults: Dict[str, int] = field(default_factory=dict)
+    # streamed I/O split by STORED precision ({"fp"|"int8"|"int4": bytes},
+    # summing to ``bytes_swapped``): under a mixed-precision plan this is
+    # the realized per-precision byte breakdown; uniform stores report one
+    # bucket (their precision, "fp" for exact backends).
+    bytes_by_precision: Dict[str, int] = field(default_factory=dict)
 
     # ------------------------------------------------------------ timeline
     def stage_spans(self, stage: str) -> List[tuple]:
@@ -609,6 +614,16 @@ class SwapEngine:
                 self.stats.timeline.extend(r.stages)
                 self.stats.bytes_logical += n
                 self.stats.bytes_resident_quantized += r.quantized_bytes
+                # per-precision I/O split: mixed stores report it per read;
+                # single-precision backends bucket the whole read under the
+                # store's precision ("fp" for exact ones)
+                pb = r.precision_bytes
+                if pb is None:
+                    pb = {getattr(self.store, "precision", "fp"): r.io_bytes}
+                for prec, b in pb.items():
+                    if b:
+                        self.stats.bytes_by_precision[prec] = \
+                            self.stats.bytes_by_precision.get(prec, 0) + b
                 self.stats.cache_misses += 1
                 # admission reasons in the unit's RESIDENT cost — exactly
                 # what the cache entry will charge the ledger (2-3x logical

@@ -262,6 +262,28 @@ def serve_multi_scheduled(cfg: ServeConfig) -> None:
               f"p99={_percentile(lat, 99):.1f} ms", flush=True)
 
 
+def _mixed_store_options(cfg: ServeConfig, model, params):
+    """With ``--precision mixed`` on the quant store, run the calibration
+    pass (repro/calibrate/) and return ``{"plan": PrecisionPlan}`` for the
+    SwappedModel's store; None when mixed doesn't apply (other precisions,
+    other stores, or a quant-ineligible arch that will fall back to mmap).
+    The multi-tenant paths don't need this — MultiModelRuntime.add_model
+    calibrates arriving models itself."""
+    if (cfg.runtime.precision != "mixed" or cfg.runtime.store != "quant"
+            or not model.cfg.quant_eligible):
+        return None
+    from repro.calibrate import calibrate_model
+    _, plan = calibrate_model(model, params, fidelity=cfg.runtime.fidelity,
+                              prefetch_depth=cfg.runtime.prefetch_depth)
+    hist = plan.histogram()
+    print(f"[calibrate] {model.cfg.name}: fidelity {cfg.runtime.fidelity:g} "
+          f"-> predicted_err {plan.predicted_err:.2e}, "
+          f"stored {plan.stored_bytes/1e6:.2f} MB, units "
+          f"fp={hist['fp']} int8={hist['int8']} int4={hist['int4']}",
+          flush=True)
+    return {"plan": plan}
+
+
 def serve_paged(cfg: ServeConfig, mcfg, model, params) -> None:
     """Swap-aware continuous-batching decode: weight blocks are planned
     against (1 - kv_frac) of the budget and the KV page pool is sized from
@@ -276,7 +298,9 @@ def serve_paged(cfg: ServeConfig, mcfg, model, params) -> None:
         sm = SwappedModel(model, params, d, mode="snet", budget=budget,
                           prefetch_depth=cfg.runtime.prefetch_depth,
                           store_backend=cfg.runtime.store,
-                          precision=cfg.runtime.precision)
+                          precision=cfg.runtime.precision,
+                          store_options=_mixed_store_options(cfg, model,
+                                                             params))
         sm.partition(budget - kv_bytes, DelayModel(), 1,
                      cfg.workload.prompt_len)
         kv = PagedKVCache.for_budget(mcfg, sm.engine.ledger, kv_bytes,
@@ -397,7 +421,9 @@ def serve_single(cfg: ServeConfig) -> None:
             sm = SwappedModel(model, params, d, mode="snet", budget=None,
                               prefetch_depth=cfg.runtime.prefetch_depth,
                               store_backend=cfg.runtime.store,
-                              precision=cfg.runtime.precision)
+                              precision=cfg.runtime.precision,
+                              store_options=_mixed_store_options(cfg, model,
+                                                                 params))
             sm.partition(budget, DelayModel(), cfg.workload.requests,
                          cfg.workload.prompt_len)
             batch = {"tokens": jax.numpy.asarray(
@@ -519,11 +545,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "double-caching of swapped bytes under a tight "
                          "budget; falls back to buffered reads on "
                          "filesystems without O_DIRECT)")
-    ap.add_argument("--precision", default=None, choices=["int8", "int4"],
+    ap.add_argument("--precision", default=None,
+                    choices=["int8", "int4", "mixed"],
                     help="quant-store unit precision override (default: the "
                          "arch config's swap_precision; int4 packs two "
                          "weights per byte — half the swap bytes of int8 "
-                         "at a max|w[:,c]|/14 per-channel error bound)")
+                         "at a max|w[:,c]|/14 per-channel error bound; "
+                         "mixed runs the sensitivity calibration pass "
+                         "(repro/calibrate/) and assigns int4/int8/fp PER "
+                         "UNIT against the --fidelity target)")
+    ap.add_argument("--fidelity", type=float, default=None,
+                    help="max rel-L2 model-output error the mixed-precision "
+                         "plan may spend (e.g. 1e-2); required with "
+                         "--precision mixed")
     return ap
 
 
@@ -559,6 +593,7 @@ def cli_overrides(args: argparse.Namespace) -> dict:
     put("runtime", "executors", args.executors)
     put("runtime", "store", args.store)
     put("runtime", "precision", args.precision)
+    put("runtime", "fidelity", args.fidelity)
     put("runtime", "paged", args.paged)
     put("runtime", "kv_frac", args.kv_frac)
     put("runtime", "page_tokens", args.page_tokens)

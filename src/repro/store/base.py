@@ -32,7 +32,7 @@ from __future__ import annotations
 import os
 import zlib
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Any, Dict, List, Sequence, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -72,6 +72,11 @@ class UnitRead:
                           ``QuantizedTensor`` leaves, the fused-path
                           residency; 0 for eager/raw backends) — what
                           ``SwapStats.bytes_resident_quantized`` reports;
+    ``precision_bytes`` — io_bytes split by stored precision
+                          (``{"fp"|"int8"|"int4": bytes}``); None from
+                          single-precision backends — the engine then
+                          buckets the whole read under its store's
+                          precision (``SwapStats.bytes_by_precision``);
     ``stages``          — the per-stage timeline of this read: ``(stage,
                           start, end)`` tuples in ``time.perf_counter``
                           absolute seconds, run on the LOADER thread. Stage
@@ -91,6 +96,7 @@ class UnitRead:
     asm_s: float = 0.0
     quantized_bytes: int = 0
     stages: Tuple[Tuple[str, float, float], ...] = ()
+    precision_bytes: Optional[Dict[str, int]] = None
 
 
 class BlockStore:

@@ -63,6 +63,13 @@ conditioned. Per-MODEL eligibility and precision are config knobs
 (``ModelConfig.quant_eligible`` / ``swap_precision``): architectures whose
 recurrent dynamics amplify weight error opt out and fall back to the mmap
 backend.
+
+Mixed precision (``plan=...``): instead of one store-wide bit-width, a
+calibration-derived plan (repro/calibrate/) assigns fp | int8 | int4 PER
+UNIT. Each ``QLeaf`` records its own ``bits`` and the read path dispatches
+on the leaf, so one store mixes exact and quantized units freely; the
+per-precision stored-byte split flows out through
+``UnitRead.precision_bytes`` into ``SwapStats.bytes_by_precision``.
 """
 from __future__ import annotations
 
@@ -84,6 +91,38 @@ MIN_QUANT_SIZE = 1024       # elements; smaller leaves are stored raw
 # vision models, whose consumer is also models/layers.linear
 FUSED_STREAM_KEYS = FUSED_WEIGHT_KEYS | {"w"}
 
+# per-unit bit-width labels for the byte accounting; 0 = raw/fp
+BITS_PRECISION = {0: "fp", 8: "int8", 4: "int4"}
+
+
+def quantizable(arr: np.ndarray, min_quant_size: int = MIN_QUANT_SIZE) -> bool:
+    """The store's quantization predicate (module docstring, "What gets
+    quantized") — shared with the calibration profiler so measured
+    sensitivity covers exactly the leaves the store will quantize."""
+    return (arr.ndim >= 2 and arr.size >= min_quant_size
+            and jnp.issubdtype(jnp.dtype(arr.dtype), jnp.floating))
+
+
+def unit_stored_nbytes(params, bits: int,
+                       min_quant_size: int = MIN_QUANT_SIZE) -> int:
+    """Exact stored payload size of one unit at a bit-width WITHOUT building
+    the store: every ``put`` segment below pads to ALIGN, so the analytic
+    sum of aligned segment sizes equals the file size byte-for-byte. The
+    precision policy packs against this table. ``bits=0`` = all-raw (fp)."""
+    from repro.core.skeleton import _align
+    assert bits in (0, 4, 8), bits
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        arr = np.asarray(leaf)
+        if bits and quantizable(arr, min_quant_size):
+            rows = int(np.prod(arr.shape[:-1]))
+            cols = int(arr.shape[-1])
+            qrows = rows if bits == 8 else (rows + 1) // 2
+            total += _align(qrows * cols) + _align(4 * cols)
+        else:
+            total += _align(arr.nbytes)
+    return total
+
 
 @dataclass(frozen=True)
 class QLeaf:
@@ -95,7 +134,11 @@ class QLeaf:
     fp32 [cols] scales at ``scale_offset``. ``dtype`` is the ORIGINAL dtype
     dequant restores. ``fusable`` marks leaves the fused kernel can stream
     still-quantized (2-D, key in :data:`FUSED_STREAM_KEYS`); in lazy mode
-    every other quantized leaf is dequantized on the loader thread."""
+    every other quantized leaf is dequantized on the loader thread.
+    ``bits`` is the PER-LEAF bit-width (8 | 4 for quantized leaves, 0 for
+    raw) — under a mixed-precision plan different units of one store carry
+    different widths, so the read path dispatches on the leaf, never on a
+    store-global setting."""
     offset: int
     nbytes: int
     shape: Tuple[int, ...]
@@ -104,6 +147,7 @@ class QLeaf:
     rows: int = 0
     cols: int = 0
     fusable: bool = False
+    bits: int = 0
 
 
 @dataclass
@@ -111,6 +155,7 @@ class QuantMeta:
     leaves: List[QLeaf]
     stored_nbytes: int
     resident_lazy: int = 0   # mixed residency of the eager=False read (bytes)
+    precision_bytes: Dict[str, int] = None  # stored bytes per fp|int8|int4
 
 
 class QuantizedStore(BlockStore):
@@ -118,25 +163,47 @@ class QuantizedStore(BlockStore):
     raw_format = False
 
     def __init__(self, workdir: str, min_quant_size: int = MIN_QUANT_SIZE,
-                 bits: int = 8, eager: bool = True, verify: bool = False):
+                 bits: int = 8, eager: bool = True, verify: bool = False,
+                 plan=None):
+        """``plan`` switches the store to PER-UNIT mixed precision: a dict
+        ``{unit_name: 0|8|4}`` (0 = raw fp) or any object with a
+        ``bits_map()`` method returning one — duck-typed so this module
+        never imports the calibrate package that produces
+        ``PrecisionPlan``s. Units the plan does not name are stored RAW:
+        an unprofiled unit must round-trip bit-exactly, not inherit a
+        bit-width nobody measured. Without a plan the store is uniform at
+        ``bits`` (the pre-existing behaviour)."""
         assert bits in (8, 4), bits
         super().__init__(workdir, verify=verify)
         self.min_quant_size = min_quant_size
         self.bits = bits
         self.eager = eager
-        self.suffix = ".q8" if bits == 8 else ".q4"
+        bm = plan.bits_map() if hasattr(plan, "bits_map") else plan
+        self.plan = dict(bm) if bm is not None else None
+        if self.plan is not None:
+            bad = {b for b in self.plan.values() if b not in (0, 4, 8)}
+            assert not bad, f"plan bit-widths must be 0|4|8, got {bad}"
+            self.suffix = ".qm"
+        else:
+            self.suffix = ".q8" if bits == 8 else ".q4"
         self._qmeta: Dict[str, QuantMeta] = {}
 
     @property
     def precision(self) -> str:
+        if self.plan is not None:
+            return "mixed"
         return "int8" if self.bits == 8 else "int4"
+
+    def _unit_bits(self, name: str) -> int:
+        return self.bits if self.plan is None else self.plan.get(name, 0)
 
     # ------------------------------------------------------------ build
     def _write_unit(self, name: str, params: dict) -> None:
         from repro.compat import tree_flatten_with_path
         from repro.core.skeleton import ALIGN, skeleton_of
         from repro.kernels.dequant import quantize_int4, quantize_int8
-        quantize = quantize_int8 if self.bits == 8 else quantize_int4
+        bits_u = self._unit_bits(name)
+        quantize = quantize_int8 if bits_u == 8 else quantize_int4
         flat, _ = tree_flatten_with_path(params)
         # logical skeleton (nbytes/meta) WITHOUT materializing the flat fp
         # buffer — the payload below is this store's only serialization
@@ -151,10 +218,11 @@ class QuantizedStore(BlockStore):
 
         qleaves: List[QLeaf] = []
         resident_lazy = 0
+        pbytes = {p: 0 for p in BITS_PRECISION.values()}
         for path, leaf in flat:
             arr = np.ascontiguousarray(np.asarray(leaf))
-            if (arr.ndim >= 2 and arr.size >= self.min_quant_size
-                    and jnp.issubdtype(jnp.dtype(arr.dtype), jnp.floating)):
+            seg0 = len(blob)
+            if bits_u and quantizable(arr, self.min_quant_size):
                 key = getattr(path[-1], "key", None) if path else None
                 fusable = arr.ndim == 2 and key in FUSED_STREAM_KEYS
                 q, scales = quantize(arr)
@@ -163,7 +231,7 @@ class QuantizedStore(BlockStore):
                 rows = int(np.prod(arr.shape[:-1]))
                 qleaves.append(QLeaf(off, q.nbytes, tuple(arr.shape),
                                      str(arr.dtype), soff, rows, q.shape[1],
-                                     fusable))
+                                     fusable, bits_u))
                 resident_lazy += (q.nbytes + scales.nbytes if fusable
                                   else arr.nbytes)
             else:
@@ -171,9 +239,12 @@ class QuantizedStore(BlockStore):
                 qleaves.append(QLeaf(off, arr.nbytes, tuple(arr.shape),
                                      str(arr.dtype)))
                 resident_lazy += arr.nbytes
+            # aligned segment growth, bucketed by the leaf's stored width
+            pbytes[BITS_PRECISION[qleaves[-1].bits]] += len(blob) - seg0
         with open(self._path(name), "wb") as fh:
             fh.write(bytes(blob))
-        self._qmeta[name] = QuantMeta(qleaves, len(blob), resident_lazy)
+        self._qmeta[name] = QuantMeta(qleaves, len(blob), resident_lazy,
+                                      pbytes)
 
     # ------------------------------------------------------------ read
     def read_unit(self, name: str) -> UnitRead:
@@ -214,7 +285,7 @@ class QuantizedStore(BlockStore):
             sv = buf[ql.scale_offset:ql.scale_offset + 4 * ql.cols] \
                 .view(np.float32)
             if lazy and not ql.fusable:
-                vals = unpack_int4(qv, ql.rows) if self.bits == 4 else qv
+                vals = unpack_int4(qv, ql.rows) if ql.bits == 4 else qv
                 # one fused multiply pass (int8 x scales -> fp32 out); the
                 # naive astype()*astype() chain costs 3 full-size copies
                 fp = np.multiply(vals, sv[None, :], dtype=np.float32)
@@ -246,10 +317,10 @@ class QuantizedStore(BlockStore):
             s = next(dev)
             if lazy:                           # fused path: stay quantized
                 leaves.append(QuantizedTensor(q, s, ql.shape, ql.dtype,
-                                              self.bits))
+                                              ql.bits))
                 qbytes += ql.nbytes + 4 * ql.cols
                 continue
-            vals = unpack_int4_ref(q, ql.rows) if self.bits == 4 else q
+            vals = unpack_int4_ref(q, ql.rows) if ql.bits == 4 else q
             leaves.append(dequant_int8(vals, s, jnp.dtype(ql.dtype).type)
                           .reshape(ql.shape))
         tree = jax.tree.unflatten(skel.treedef, leaves)
@@ -259,7 +330,10 @@ class QuantizedStore(BlockStore):
         ledger = meta.resident_lazy if lazy else stored
         stages = (("read", t0, t1), ("unpack", t1, t2), ("dispatch", t2, t3))
         return UnitRead(tree, stored, ledger, t1 - t0, t3 - t1,
-                        quantized_bytes=qbytes, stages=stages)
+                        quantized_bytes=qbytes, stages=stages,
+                        precision_bytes={k: v for k, v in
+                                         (meta.precision_bytes or {}).items()
+                                         if v})
 
     # ------------------------------------------------------------ sizes
     def stored_nbytes(self, name: str) -> int:

@@ -1,0 +1,297 @@
+"""Calibration pass + precision policy (ISSUE 10): plan determinism,
+fidelity-target monotonicity, fp bit-identity through a mixed store, the
+exact stored-bytes model, the solver's greedy ladder, artifact versioning,
+and the runtime surface (mixed guards, SwapStats.bytes_by_precision).
+"""
+import json
+import os
+import sys
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.calibrate import (PRECISION_LADDER, PrecisionPlan,
+                             SensitivityProfile, assign_precisions,
+                             calibrate_model, calibration_batch,
+                             quantize_roundtrip, unit_precision_bytes)
+from repro.calibrate.profiler import shape_signature
+from repro.configs import get_arch
+from repro.launch.train import scale_config
+from repro.models.transformer import Model
+from repro.store.quantized_store import (QuantizedStore, quantizable,
+                                         unit_stored_nbytes)
+
+RANK = {p: i for i, p in enumerate(PRECISION_LADDER)}  # int4 < int8 < fp
+
+
+def _profile(units=None, fidelity_target=None) -> SensitivityProfile:
+    """Synthetic 4-unit profile: one int4-robust, two mid, one fragile."""
+    units = units or {
+        "u0": dict(bytes_fp=4000, bytes_int8=1000, bytes_int4=500,
+                   err_int8=0.0, err_int4=0.001),
+        "u1": dict(bytes_fp=4000, bytes_int8=1000, bytes_int4=500,
+                   err_int8=0.004, err_int4=0.05),
+        "u2": dict(bytes_fp=4000, bytes_int8=1000, bytes_int4=500,
+                   err_int8=0.004, err_int4=0.06),
+        "u3": dict(bytes_fp=4000, bytes_int8=1000, bytes_int4=500,
+                   err_int8=0.02, err_int4=0.30),
+    }
+    return SensitivityProfile(arch="synthetic", method="output", seed=0,
+                              signature="s" * 16, units=units)
+
+
+def _small_model(seed=0):
+    mcfg = scale_config(get_arch("qwen2.5-3b"), "smoke")
+    model = Model(mcfg)
+    return model, model.init(jax.random.key(seed))
+
+
+# ------------------------------------------------------------------- policy
+def test_policy_greedy_ladder():
+    """Robust units stay int4, fragile ones climb; predicted error is the
+    RSS of the chosen levels and stays under the headroomed target."""
+    prof = _profile()
+    plan = assign_precisions(prof, fidelity=0.02)
+    assert plan.assignments["u0"] == "int4"       # free int4
+    assert plan.assignments["u3"] != "int4"       # 0.30 alone busts 0.02
+    rss = sum(prof.units[u][f"err_{p}"] ** 2 if p != "fp" else 0.0
+              for u, p in plan.assignments.items()) ** 0.5
+    assert rss == pytest.approx(plan.predicted_err)
+    assert plan.predicted_err <= 0.02 * 0.7 + 1e-12
+    assert plan.stored_bytes == sum(
+        prof.units[u][f"bytes_{p}"] for u, p in plan.assignments.items())
+
+
+def test_policy_fidelity_monotonicity():
+    """Tightening the target never DEMOTES any unit: the greedy upgrade
+    trajectory is target-independent, a tighter target only walks it
+    further. (The satellite's determinism contract, policy half.)"""
+    prof = _profile()
+    targets = [0.5, 0.2, 0.1, 0.05, 0.02, 0.01, 0.005, 0.001]
+    prev = None
+    for t in targets:
+        plan = assign_precisions(prof, fidelity=t)
+        if prev is not None:
+            for u in plan.assignments:
+                assert RANK[plan.assignments[u]] >= RANK[prev[u]], \
+                    f"{u} demoted at fidelity {t}"
+        prev = plan.assignments
+
+
+def test_policy_infinite_target_is_all_int4():
+    plan = assign_precisions(_profile(), fidelity=float("inf"))
+    assert set(plan.assignments.values()) == {"int4"}
+
+
+def test_policy_unquantizable_unit_forced_fp():
+    """A unit with nothing quantizable (bytes_int4 >= bytes_fp) must be
+    assigned fp — quantizing it buys no bytes, only risk."""
+    units = {
+        "raw": dict(bytes_fp=256, bytes_int8=256, bytes_int4=256,
+                    err_int8=0.0, err_int4=0.0),
+        "w": dict(bytes_fp=4000, bytes_int8=1000, bytes_int4=500,
+                  err_int8=0.001, err_int4=0.01),
+    }
+    plan = assign_precisions(_profile(units), fidelity=1.0)
+    assert plan.assignments["raw"] == "fp"
+    assert plan.assignments["w"] == "int4"
+
+
+def test_plan_json_roundtrip_and_version_gate(tmp_path):
+    plan = assign_precisions(_profile(), fidelity=0.02)
+    p = tmp_path / "plan.json"
+    plan.save(str(p))
+    back = PrecisionPlan.load(str(p))
+    assert back.to_json() == plan.to_json()
+    assert back.bits_map() == plan.bits_map()
+    doctored = json.loads(plan.to_json())
+    doctored["version"] = 99
+    with pytest.raises(ValueError, match="version"):
+        PrecisionPlan.from_json(json.dumps(doctored))
+
+
+def test_profile_json_roundtrip_and_version_gate():
+    prof = _profile()
+    back = SensitivityProfile.from_json(prof.to_json())
+    assert back.to_json() == prof.to_json()
+    doctored = json.loads(prof.to_json())
+    doctored["version"] = 99
+    with pytest.raises(ValueError, match="version"):
+        SensitivityProfile.from_json(json.dumps(doctored))
+
+
+# ----------------------------------------------------- stored-bytes model
+def test_unit_stored_nbytes_matches_store_exactly():
+    """The policy packs against unit_stored_nbytes — it must equal the
+    ACTUAL on-disk unit size for every precision, or the plan's byte
+    arithmetic drifts from what the planner/ledger will see."""
+    rng = np.random.default_rng(0)
+    params = {"w": rng.standard_normal((96, 64)).astype(np.float32),
+              "b": rng.standard_normal((64,)).astype(np.float32)}
+    for bits in (0, 8, 4):
+        with tempfile.TemporaryDirectory() as d:
+            store = QuantizedStore.build(
+                [("u", params)], d,
+                plan={"u": bits} if bits else {"u": 0})
+            actual = os.path.getsize(store._path("u"))
+            assert unit_stored_nbytes(params, bits, 1024) == actual
+
+
+
+def test_quantize_roundtrip_matches_store_numerics():
+    """Host round-trip == what reading the quant store materializes, so
+    measured sensitivity is the realized sensitivity."""
+    rng = np.random.default_rng(1)
+    params = {"w": rng.standard_normal((64, 48)).astype(np.float32)}
+    for bits in (8, 4):
+        with tempfile.TemporaryDirectory() as d:
+            store = QuantizedStore.build([("u", params)], d, bits=bits)
+            got = np.asarray(store.read_unit("u").params["w"])
+
+        np.testing.assert_array_equal(got, quantize_roundtrip(params["w"],
+                                                              bits))
+
+
+# --------------------------------------------------------- model-level pass
+def test_calibrate_model_deterministic_byte_identical():
+    """Same arch + seed + batch => byte-identical PrecisionPlan AND
+    SensitivityProfile artifacts (the satellite's determinism contract)."""
+    model, params = _small_model()
+    batch = calibration_batch(model.cfg, seed=0)
+    prof1, plan1 = calibrate_model(model, params, fidelity=2e-2, batch=batch)
+    prof2, plan2 = calibrate_model(model, params, fidelity=2e-2, batch=batch)
+    assert prof1.to_json() == prof2.to_json()
+    assert plan1.to_json() == plan2.to_json()
+
+
+def test_calibrate_model_signature_pins_geometry():
+    model, params = _small_model()
+    prof, _ = calibrate_model(model, params, fidelity=1e-1, method="weight")
+    seen, named = set(), []
+    from repro.core.runtime import SwappedModel
+    with tempfile.TemporaryDirectory() as d:
+        sm = SwappedModel(model, params, d, store_backend="mmap")
+        for u in sm.units:
+            if u.name not in seen:
+                seen.add(u.name)
+                named.append((u.name, u.params))
+        sm.close()
+    assert prof.signature == shape_signature(named)
+
+
+def test_mixed_store_fp_units_bit_identical():
+    """Units the plan assigns fp must round-trip BIT-IDENTICALLY through a
+    mixed store — fp assignment is a no-quantization promise, not a 'less
+    lossy' one. Quantized units must NOT be bit-identical (they really
+    were quantized)."""
+    rng = np.random.default_rng(2)
+    units = [(f"u{i}", {"w": rng.standard_normal((96, 64))
+                        .astype(np.float32)}) for i in range(3)]
+    plan = {"u0": 0, "u1": 8, "u2": 4}
+    with tempfile.TemporaryDirectory() as d:
+        store = QuantizedStore.build(units, d, plan=plan)
+        got = {n: np.asarray(store.read_unit(n).params["w"])
+               for n, _ in units}
+
+    ref = dict(units)
+    np.testing.assert_array_equal(got["u0"], ref["u0"]["w"])
+    assert not np.array_equal(got["u1"], ref["u1"]["w"])
+    assert not np.array_equal(got["u2"], ref["u2"]["w"])
+    np.testing.assert_array_equal(got["u1"],
+                                  quantize_roundtrip(ref["u1"]["w"], 8))
+    np.testing.assert_array_equal(got["u2"],
+                                  quantize_roundtrip(ref["u2"]["w"], 4))
+
+
+def test_mixed_store_precision_byte_split():
+    """UnitRead.precision_bytes buckets the stored segments by the bits
+    that produced them and sums to the full stored size."""
+    rng = np.random.default_rng(3)
+    units = [("a", {"w": rng.standard_normal((96, 64)).astype(np.float32)}),
+             ("b", {"w": rng.standard_normal((96, 64)).astype(np.float32)})]
+    with tempfile.TemporaryDirectory() as d:
+        store = QuantizedStore.build(units, d, plan={"a": 4, "b": 0})
+        ra, rb = store.read_unit("a"), store.read_unit("b")
+        assert set(ra.precision_bytes) == {"int4"}
+        assert set(rb.precision_bytes) == {"fp"}
+        assert sum(ra.precision_bytes.values()) == \
+            os.path.getsize(store._path("a"))
+
+
+
+def test_unplanned_unit_stored_raw():
+    """A unit the plan omits is stored RAW (bits=0): calibration that
+    never saw a unit must not silently quantize it."""
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((96, 64)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        store = QuantizedStore.build([("u", {"w": w})], d, plan={})
+        got = np.asarray(store.read_unit("u").params["w"])
+
+    np.testing.assert_array_equal(got, w)
+
+
+# ----------------------------------------------------------- runtime surface
+def test_swapped_model_mixed_requires_plan():
+    from repro.core.runtime import SwappedModel
+    model, params = _small_model()
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError, match="plan"):
+            SwappedModel(model, params, d, store_backend="quant",
+                         precision="mixed")
+
+
+def test_swapped_model_mixed_end_to_end_stats():
+    """calibrate -> mixed store -> forward: per-precision byte split shows
+    up in stats and bytes_swapped lands at/below the int8-uniform point."""
+    from repro.core.runtime import SwappedModel
+    model, params = _small_model()
+    if not model.cfg.quant_eligible:
+        pytest.skip("smoke arch not quant-eligible")
+    _, plan = calibrate_model(model, params, fidelity=5e-2)
+    with tempfile.TemporaryDirectory() as d:
+        sm = SwappedModel(model, params, d, store_backend="quant",
+                          precision="mixed", store_options={"plan": plan})
+        sm.set_plan(tuple(range(1, len(sm.units))))
+        batch = calibration_batch(model.cfg, seed=0)
+        _, st = sm.forward(batch)
+        sm.close()
+    bp = st["bytes_by_precision"]
+    assert bp and sum(bp.values()) == st["bytes_swapped"]
+    hist = plan.histogram()
+    for prec, n in hist.items():
+        if n and prec != "fp":
+            assert bp.get(prec, 0) > 0
+
+
+def test_config_mixed_validation():
+    from repro.config import ServeConfig
+    from repro.errors import ConfigError
+    cfg = ServeConfig.from_dict({
+        "arch": "qwen2.5-3b",
+        "runtime": {"store": "quant", "precision": "mixed",
+                    "fidelity": 1e-2}})
+    cfg.validate()
+    with pytest.raises(ConfigError, match="fidelity"):
+        ServeConfig.from_dict({
+            "arch": "qwen2.5-3b",
+            "runtime": {"store": "quant",
+                        "precision": "mixed"}}).validate()
+    with pytest.raises(ConfigError, match="quant"):
+        ServeConfig.from_dict({
+            "arch": "qwen2.5-3b",
+            "runtime": {"store": "mmap", "precision": "mixed",
+                        "fidelity": 1e-2}}).validate()
+
+
+def test_quantizable_predicate():
+    assert quantizable(np.zeros((64, 64), np.float32), 1024)
+    assert not quantizable(np.zeros((64,), np.float32), 1024)    # 1-D
+    assert not quantizable(np.zeros((8, 8), np.float32), 1024)   # too small
+    assert not quantizable(np.zeros((64, 64), np.int32), 1024)   # not float
+    b = unit_precision_bytes({"w": np.zeros((64, 64), np.float32)}, 1024)
+    assert b["int4"] < b["int8"] < b["fp"]

@@ -1,10 +1,23 @@
-"""Roofline/report helpers: model FLOPs, analytic flops, CSV rendering."""
+"""Roofline/report helpers + CI reporting surface: model FLOPs, analytic
+flops, CSV rendering, the perf-regression gate sections, and the
+tools/ci_summary.py job-summary renderers (unit-tested here against the
+COMMITTED results/*.json fixtures, so a bench schema shift fails a test
+instead of silently blanking the job summary)."""
+import json
 import os
 import sys
 
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _fixture(name):
+    with open(os.path.join(RESULTS, name)) as fh:
+        return json.load(fh)
 
 from repro.configs import ARCHS, SHAPES
 from repro.configs.flops import analytic_flops_per_device
@@ -92,6 +105,69 @@ def test_regression_gate_fails_byte_drift_and_missing_arm():
     assert any("missing" in v for v in compare(base, shrunk))
 
 
+def test_regression_gate_mixed_section():
+    """The mixed-precision separation is absolute and deterministic: any
+    doctored flip of its four invariants must trip the gate."""
+    import copy
+    from benchmarks.check_regression import compare_mixed
+    mp = _fixture("BENCH_swap_store.json").get("mixed_precision")
+    if mp is None:
+        pytest.skip("fixture predates the mixed_precision section")
+    assert compare_mixed(mp, mp) == []
+    assert compare_mixed(None, mp) == []          # pre-section baseline era
+    assert any("missing" in v for v in compare_mixed(mp, None))
+    broken = copy.deepcopy(mp)
+    broken["mixed"]["meets_target"] = False
+    assert any("fidelity target" in v for v in compare_mixed(mp, broken))
+    broken = copy.deepcopy(mp)
+    broken["int4"]["meets_target"] = True
+    assert any("separation" in v for v in compare_mixed(mp, broken))
+    broken = copy.deepcopy(mp)
+    broken["mixed"]["layers_per_block"] = broken["int8"]["layers_per_block"]
+    assert any("packing" in v for v in compare_mixed(mp, broken))
+    broken = copy.deepcopy(mp)
+    broken["mixed"]["bytes_swapped"] = broken["int8"]["bytes_swapped"] + 1
+    assert any("strictly between" in v for v in compare_mixed(mp, broken))
+
+
+def test_regression_gate_multi_tenant_section():
+    import copy
+    from benchmarks.check_regression import compare_multi_tenant
+    mt = _fixture("BENCH_multi_tenant.json")
+    assert compare_multi_tenant(mt, mt) == []
+    assert compare_multi_tenant(None, mt) == []
+    assert any("missing" in v for v in compare_multi_tenant(mt, None))
+    slow = copy.deepcopy(mt)                      # hi-class tail blowout
+    slow["arms"]["scheduled"]["classes"]["hi"]["p99_ms"] *= 3.0
+    assert any("p99_ms" in v
+               for v in compare_multi_tenant(mt, slow, latency_tol=0.2))
+    flat = copy.deepcopy(mt)                      # scheduler stopped helping
+    flat["hi_p99_speedup"] = 1.0
+    assert any("floor" in v for v in compare_multi_tenant(mt, flat))
+    over = copy.deepcopy(mt)
+    over["arms"]["scheduled"]["budget_ok"] = False
+    assert any("budget" in v for v in compare_multi_tenant(mt, over))
+    leak = copy.deepcopy(mt)
+    leak["decode_heavy"]["kv_pool_clean"] = False
+    assert any("kv_pool_clean" in v for v in compare_multi_tenant(mt, leak))
+
+
+def test_regression_gate_fleet_section():
+    import copy
+    from benchmarks.check_regression import compare_fleet
+    fl = _fixture("BENCH_fleet.json")
+    assert compare_fleet(fl, fl) == []
+    assert compare_fleet(None, fl) == []
+    assert any("missing" in v for v in compare_fleet(fl, None))
+    cold = copy.deepcopy(fl)
+    cold["arrival"]["cold_over_warm"] = 50.0
+    assert any("cold_over_warm" in v for v in compare_fleet(fl, cold))
+    for key in ("ledger_clean", "budget_ok", "clean_shutdown"):
+        broken = copy.deepcopy(fl)
+        broken[key] = False
+        assert any(key in v for v in compare_fleet(fl, broken))
+
+
 def test_regression_gate_decode_section():
     """The continuous-batching point: deterministic counts exact, throughput
     may only rise or dip within tolerance, b8/b1 speedup has an absolute
@@ -113,3 +189,76 @@ def test_regression_gate_decode_section():
     flat["speedup_b8_over_b1"] = 1.4
     assert any("floor" in v for v in compare_decode(base, flat))
     assert any("missing" in v for v in compare_decode(base, None))
+
+
+# ------------------------------------------------------- CI job summary tool
+def test_ci_summary_junit_counts_and_verdict(tmp_path):
+    import ci_summary
+    xml = tmp_path / "report.xml"
+    xml.write_text(
+        '<testsuites><testsuite tests="10" failures="1" errors="0" '
+        'skipped="2"/></testsuites>')
+    counts = ci_summary.junit_counts(str(xml))
+    assert counts == {"passed": 7, "failed": 1, "errors": 0, "skipped": 2}
+    lines, ok = ci_summary.render_junit(counts, baseline=7)
+    assert not ok and "REGRESSION" in lines[0]    # failures always trip
+    clean = {"passed": 7, "failed": 0, "errors": 0, "skipped": 0}
+    assert ci_summary.render_junit(clean, baseline=7)[1]
+    assert not ci_summary.render_junit(clean, baseline=8)[1]
+    assert ci_summary.junit_counts(str(tmp_path / "absent.xml")) == \
+        {"passed": 0, "failed": 0, "errors": 0, "skipped": 0}
+
+
+def test_ci_summary_renders_committed_fixtures():
+    """Every renderer must digest its COMMITTED fixture — the schema the
+    bench actually writes — and surface its headline quantities."""
+    import ci_summary
+    swap = _fixture("BENCH_swap_store.json")
+    out = "\n".join(ci_summary.render_swap_store(swap, chaos_seed="42"))
+    assert "swap-store fused m2" in out and "swap-store mmap m2" in out
+    assert "chaos faulty" in out and "randomized pytest seed 42" in out
+    if "mixed_precision" in swap:
+        assert "mixed-precision plan @ fidelity" in out
+        assert "meets target" in out
+    out = "\n".join(ci_summary.render_decode(_fixture("BENCH_decode.json")))
+    assert "decode b1" in out and "decode b8" in out and "speedup" in out
+    out = "\n".join(ci_summary.render_multi_tenant(
+        _fixture("BENCH_multi_tenant.json")))
+    assert "multi-tenant scheduled" in out and "hi-class p99 speedup" in out
+    assert "decode-heavy mix" in out and "http arm parity" in out
+    out = "\n".join(ci_summary.render_fleet(_fixture("BENCH_fleet.json")))
+    assert "fleet over HTTP" in out and "ledger clean" in out
+
+
+def test_ci_summary_mixed_precision_renderer():
+    import ci_summary
+    assert ci_summary.render_mixed_precision(None) == []
+    mp = {"fidelity_target": 0.035,
+          "plan": {"histogram": {"fp": 0, "int8": 6, "int4": 6},
+                   "predicted_err": 0.0195, "stored_mb": 14.9},
+          "int8": {"layers_per_block": 2.4, "bytes_swapped": 19783680,
+                   "rel_err": 0.0302, "meets_target": True},
+          "int4": {"layers_per_block": 4.0, "bytes_swapped": 9953280,
+                   "rel_err": 0.3601, "meets_target": False},
+          "mixed": {"layers_per_block": 4.0, "bytes_swapped": 14868480,
+                    "rel_err": 0.0195, "meets_target": True}}
+    out = "\n".join(ci_summary.render_mixed_precision(mp))
+    assert "fp=0 int8=6 int4=6" in out
+    assert "int4: 4.00 layers/block" in out
+    assert "(meets target: False)" in out
+
+
+def test_ci_summary_end_to_end(tmp_path):
+    """render_summary over the committed results dir: one markdown doc,
+    exit verdict from the junit side only."""
+    import ci_summary
+    text, ok = ci_summary.render_summary(
+        results_dir=RESULTS, report_xml=str(tmp_path / "absent.xml"),
+        baseline=0)
+    assert ok and text.startswith("### tier-1:")
+    for marker in ("swap-store", "decode", "multi-tenant", "fleet"):
+        assert marker in text, f"missing section {marker}"
+    _, bad = ci_summary.render_summary(
+        results_dir=RESULTS, report_xml=str(tmp_path / "absent.xml"),
+        baseline=1)
+    assert not bad

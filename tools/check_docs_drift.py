@@ -25,6 +25,13 @@ Docs rot silently: a rename refactor updates every import but no grep hits
 the prose. This runs in CI next to the test suite so the rename PR is the
 one that fixes its own docs. Heuristic by design — only tokens that LOOK
 like repo paths or flags are validated; plain prose is never parsed.
+
+One non-docs hygiene check rides along: every ``results/*.json`` path that
+``benchmarks/check_regression.py`` or ``.github/workflows/ci.yml``
+references must be git-TRACKED. ``.gitignore`` ignores results scratch
+patterns, so a new baseline/fixture file that matches one (or a rename
+that forgets ``git add``) would otherwise sit untracked forever while CI
+quietly gates against a stale committed copy.
 """
 from __future__ import annotations
 
@@ -171,6 +178,35 @@ def check_serving_config(readme: str, arch: str) -> list[str]:
     return errors
 
 
+def check_tracked_results() -> list[str]:
+    """Every results/*.json path referenced by the regression gate or the
+    CI workflow must be tracked in git. Skips silently when git (or the
+    .git dir) is unavailable — a source tarball can still run the docs
+    checks."""
+    import subprocess
+    refs: set[str] = set()
+    for src in (ROOT / "benchmarks" / "check_regression.py",
+                ROOT / ".github" / "workflows" / "ci.yml"):
+        if src.exists():
+            refs.update(re.findall(r"results/[\w.-]+\.json",
+                                   src.read_text()))
+    # files CI (re)generates fresh on every run are artifacts, not
+    # fixtures — only the committed baseline inputs must be tracked,
+    # and those are exactly the paths the gate READS as its baseline
+    # plus any fixture the reporting tests pin (all BENCH_*.json today)
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "--", "results/"], cwd=ROOT,
+            capture_output=True, text=True, timeout=30, check=True).stdout
+    except (OSError, subprocess.SubprocessError):
+        return []
+    tracked = set(out.split())
+    return [f"results hygiene: `{p}` is referenced by the CI gate but not "
+            f"git-tracked (matched a .gitignore scratch pattern, or "
+            f"`git add` was forgotten)"
+            for p in sorted(refs) if p not in tracked]
+
+
 def main() -> int:
     flags = defined_flags()
     errors: list[str] = []
@@ -199,6 +235,7 @@ def main() -> int:
                               f"(STORE_BACKENDS) is undocumented")
 
     errors += check_serving_config(readme, arch)
+    errors += check_tracked_results()
 
     if errors:
         print(f"docs drift: {len(errors)} problem(s)")

@@ -1,0 +1,217 @@
+#!/usr/bin/env python
+"""Render the CI job summary (markdown) from report.xml + results/*.json.
+
+Extracted from the inline heredoc in .github/workflows/ci.yml so the
+renderers are unit-testable (tests/test_reporting.py) against the
+COMMITTED results fixtures — a bench JSON schema shift now fails a test
+instead of silently blanking a section of the job summary.
+
+Usage (the workflow appends stdout to $GITHUB_STEP_SUMMARY)::
+
+    python tools/ci_summary.py >> "$GITHUB_STEP_SUMMARY"
+
+Exit status: 0 when the junit verdict is OK (passes >= $BASELINE_PASSED
+and zero failures/errors), 1 on a regression — the workflow step inherits
+it, so the summary step doubles as the pass-count gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import xml.etree.ElementTree as ET
+from typing import Dict, List, Optional, Tuple
+
+
+# ------------------------------------------------------------------- junit
+def junit_counts(path: str) -> Dict[str, int]:
+    """passed/failed/errors/skipped totals from a junit XML report.
+    The XML is the machine-readable truth (regexing the console log breaks
+    on pytest wording/plugin changes). Missing file -> all zeros."""
+    passed = failed = errors = skipped = 0
+    if os.path.exists(path):
+        root = ET.parse(path).getroot()
+        for s in root.iter("testsuite"):
+            tests = int(s.get("tests", 0))
+            failed += int(s.get("failures", 0))
+            errors += int(s.get("errors", 0))
+            skipped += int(s.get("skipped", 0))
+            passed += (tests - int(s.get("failures", 0))
+                       - int(s.get("errors", 0)) - int(s.get("skipped", 0)))
+    return {"passed": passed, "failed": failed, "errors": errors,
+            "skipped": skipped}
+
+
+def render_junit(counts: Dict[str, int],
+                 baseline: int) -> Tuple[List[str], bool]:
+    """The headline line + the OK/REGRESSION verdict."""
+    bad = counts["failed"] + counts["errors"]
+    ok = counts["passed"] >= baseline and bad == 0
+    verdict = "OK" if ok else "REGRESSION"
+    return [f"### tier-1: {counts['passed']} passed, "
+            f"{counts['failed']} failed, {counts['errors']} errors, "
+            f"{counts['skipped']} skipped "
+            f"(baseline {baseline} passed) — **{verdict}**"], ok
+
+
+# ---------------------------------------------------------- bench renderers
+def render_swap_store(r: dict, chaos_seed: str = "?") -> List[str]:
+    """BENCH_swap_store.json: the fused/mmap m=2 points, the chaos arm,
+    and the calibrated mixed-precision arm."""
+    lines = []
+    for backend in ("fused", "mmap"):
+        p = r["backends"][backend]["m2"]
+        lines.append(f"- swap-store {backend} m2: "
+                     f"latency {p['latency_ms']:.1f} ms, "
+                     f"overlap_eff {p['overlap_efficiency']:.3f}, "
+                     f"swapped {p['bytes_swapped'] / 1e6:.1f} MB "
+                     f"({r['workload']})")
+    ch = r.get("chaos")
+    if ch:
+        f = ch["faulty"]
+        lines.append(f"- chaos faulty(mmap, p={ch['p']}) seed "
+                     f"{ch['seed']}: {sum(f['injected'].values())} "
+                     f"faults injected over {f['reads']} reads, "
+                     f"{f['retries']} retries, "
+                     f"wrong_outputs {f['wrong_outputs']}, "
+                     f"p99 {f['p99_ms']:.1f} ms "
+                     f"({f['p99_inflation_vs_mmap']:.2f}x mmap); "
+                     f"randomized pytest seed {chaos_seed}")
+    lines.extend(render_mixed_precision(r.get("mixed_precision")))
+    return lines
+
+
+def render_mixed_precision(mp: Optional[dict]) -> List[str]:
+    """The mixed_precision section: plan shape + the three-arm separation
+    the regression gate enforces (compare_mixed)."""
+    if not mp:
+        return []
+    hist = mp["plan"]["histogram"]
+    lines = [f"- mixed-precision plan @ fidelity {mp['fidelity_target']:g}: "
+             f"units fp={hist['fp']} int8={hist['int8']} "
+             f"int4={hist['int4']}, "
+             f"predicted_err {mp['plan']['predicted_err']:.4f}, "
+             f"stored {mp['plan']['stored_mb']:.1f} MB"]
+    for arm in ("int8", "int4", "mixed"):
+        a = mp[arm]
+        lines.append(f"  - {arm}: {a['layers_per_block']:.2f} layers/block, "
+                     f"swapped {a['bytes_swapped'] / 1e6:.1f} MB, "
+                     f"rel_err {a['rel_err']:.4f} "
+                     f"(meets target: {a['meets_target']})")
+    return lines
+
+
+def render_decode(r: dict) -> List[str]:
+    lines = []
+    for arm, a in sorted(r["arms"].items()):
+        lines.append(f"- decode {arm} (max_batch={a['max_batch']}): "
+                     f"{a['tok_per_s']:.1f} tok/s "
+                     f"(decode-only {a['decode_tok_per_s']:.1f}), "
+                     f"occupancy {a['mean_occupancy']:.2f}, "
+                     f"kv pages peak {a['kv_pages_peak']}/"
+                     f"{a['kv_pool_pages']}, "
+                     f"peak {a['peak_resident_mb']:.1f} MB "
+                     f"(budget ok: {a['budget_ok']})")
+    lines.append(f"- continuous-batching speedup b8/b1: "
+                 f"{r['speedup_b8_over_b1']:.2f}x overall, "
+                 f"{r['decode_speedup_b8_over_b1']:.2f}x decode-only")
+    return lines
+
+
+def render_multi_tenant(r: dict) -> List[str]:
+    lines = []
+    for arm, a in r["arms"].items():
+        cls = a["classes"]
+        lines.append(f"- multi-tenant {arm} (K={a['executors']}): "
+                     f"hi p50/p99 {cls['hi']['p50_ms']:.0f}/"
+                     f"{cls['hi']['p99_ms']:.0f} ms, "
+                     f"lo p50/p99 {cls['lo']['p50_ms']:.0f}/"
+                     f"{cls['lo']['p99_ms']:.0f} ms, "
+                     f"preemptions {a['preemptions']}, "
+                     f"peak {a['peak_resident_mb']:.1f} MB "
+                     f"(budget ok: {a['budget_ok']})")
+    lines.append(f"- hi-class p99 speedup vs serialized: "
+                 f"{r['hi_p99_speedup']:.2f}x")
+    par = r.get("http_parity")
+    if par:
+        http_arm = r["arms"]["scheduled_http"]
+        lines.append(f"- http arm parity vs in-process: "
+                     f"ok={par['ok']} (tolerance {par['tolerance']}x), "
+                     f"poll overhead "
+                     f"{http_arm['mean_poll_overhead_ms']:.1f} ms")
+    dh = r.get("decode_heavy")
+    if dh:
+        cls = dh["classes"]
+        lines.append(f"- decode-heavy mix: "
+                     f"hi p50/p99 {cls['hi']['p50_ms']:.0f}/"
+                     f"{cls['hi']['p99_ms']:.0f} ms, "
+                     f"gen_lo p50/p99 {cls['gen_lo']['p50_ms']:.0f}/"
+                     f"{cls['gen_lo']['p99_ms']:.0f} ms, "
+                     f"decode-step preemptions {dh['preemptions']}, "
+                     f"peak {dh['peak_resident_mb']:.1f} MB "
+                     f"(budget ok: {dh['budget_ok']}, "
+                     f"kv pool clean: {dh['kv_pool_clean']})")
+    return lines
+
+
+def render_fleet(r: dict) -> List[str]:
+    arr = r["arrival"]
+    sc = r["scrape"]
+    return [f"- fleet over HTTP (profile {r['profile']}, "
+            f"{r['budget_mb']:g} MB): model arrival "
+            f"{arr['arch']} registered in "
+            f"{arr['register_ms']:.0f} ms, cold first request "
+            f"{arr['cold_over_warm']:.2f}x warm; scrape "
+            f"{sc['samples']} samples / {sc['families']} families, "
+            f"peak {r['peak_resident_mb']:.1f} MB "
+            f"(budget ok: {r['budget_ok']}, "
+            f"ledger clean: {r['ledger_clean']})"]
+
+
+# ---------------------------------------------------------------- assembly
+RENDERERS = (
+    ("BENCH_swap_store.json", render_swap_store),
+    ("BENCH_decode.json", render_decode),
+    ("BENCH_multi_tenant.json", render_multi_tenant),
+    ("BENCH_fleet.json", render_fleet),
+)
+
+
+def render_summary(results_dir: str = "results",
+                   report_xml: str = "report.xml",
+                   baseline: int = 0,
+                   chaos_seed: str = "?") -> Tuple[str, bool]:
+    """The whole job summary. Missing bench files are skipped (their CI
+    step failed before writing — the junit verdict already covers it)."""
+    lines, ok = render_junit(junit_counts(report_xml), baseline)
+    for fname, fn in RENDERERS:
+        path = os.path.join(results_dir, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as fh:
+            r = json.load(fh)
+        lines.extend(fn(r, chaos_seed) if fn is render_swap_store
+                     else fn(r))
+    return "\n".join(lines) + "\n", ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--results-dir", default="results")
+    ap.add_argument("--report-xml", default="report.xml")
+    ap.add_argument("--baseline", type=int,
+                    default=int(os.environ.get("BASELINE_PASSED", "0")),
+                    help="minimum tier-1 pass count "
+                         "(default: $BASELINE_PASSED)")
+    args = ap.parse_args(argv)
+    text, ok = render_summary(
+        results_dir=args.results_dir, report_xml=args.report_xml,
+        baseline=args.baseline,
+        chaos_seed=os.environ.get("chaos_seed", "?"))
+    sys.stdout.write(text)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
